@@ -1,0 +1,40 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000,
+                    help="graph size for the engine benchmarks")
+    ap.add_argument("--only", default=None,
+                    help="comma list: runtime,convergence,io,kernels")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_convergence, bench_io, bench_kernels,
+                            bench_runtime)
+    suites = {
+        "runtime": lambda: bench_runtime.run(args.n),
+        "convergence": lambda: bench_convergence.run(args.n),
+        "io": lambda: bench_io.run(args.n),
+        "kernels": bench_kernels.run,
+    }
+    pick = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    ok = True
+    for key in pick:
+        try:
+            for name, us, derived in suites[key]():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            ok = False
+            print(f"{key},-1,ERROR:{e!r}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

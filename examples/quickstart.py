@@ -1,0 +1,36 @@
+"""Quickstart: the paper's structure-aware engine vs the Gemini-style
+baseline on a convergence-skewed power-law graph (PageRank).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core.baseline import BaselineEngine
+from repro.core.engine import EngineConfig, StructureAwareEngine
+
+
+def main():
+    g = G.core_periphery_graph(20000, avg_deg=8, seed=1, chords=1)
+    prog = A.pagerank()
+    cfg = EngineConfig(t2=1e-9, width=16, block_size=512)
+
+    base = BaselineEngine(g, prog, cfg, frontier=False).run()
+    sa = StructureAwareEngine(g, prog, cfg).run()
+
+    assert np.allclose(base.values, sa.values, rtol=1e-4, atol=1e-7), \
+        "engines disagree!"
+    print(f"{'':14s}{'iters':>8s}{'updates':>12s}{'loads':>8s}{'MB':>10s}")
+    for name, r in [("baseline", base), ("structure-aware", sa)]:
+        m = r.metrics
+        print(f"{name:14s}{m.iterations:8d}{m.updates:12d}"
+              f"{m.block_loads:8d}{m.bytes_loaded/1e6:10.1f}")
+    m0, m1 = base.metrics, sa.metrics
+    print(f"\nstructure-aware gain: {m0.updates/m1.updates:.2f}x fewer "
+          f"updates, {m0.block_loads/m1.block_loads:.2f}x fewer partition "
+          f"loads, {m0.bytes_loaded/m1.bytes_loaded:.2f}x less I/O")
+
+
+if __name__ == "__main__":
+    main()

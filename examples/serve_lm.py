@@ -1,0 +1,9 @@
+"""Batched serving example: prefill + greedy decode on the hybrid arch.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "hymba_1p5b", "--reduced", "--batch", "4",
+          "--prompt-len", "32", "--gen", "16"])

@@ -1,0 +1,3 @@
+"""repro: structure-aware graph processing + multi-pod LM substrate in JAX."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from repro.ckpt.manager import CheckpointManager, reshard
+
+__all__ = ["CheckpointManager", "reshard"]

@@ -1,0 +1,11 @@
+"""granite-moe-3b-a800m [moe]: 32L d=1536 24H (GQA kv=8), 40 experts top-8,
+expert width 512. [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+    d_ff=512, vocab_size=49155,
+    num_experts=40, experts_per_token=8, num_shared_experts=0,
+    moe_d_ff=512,
+)

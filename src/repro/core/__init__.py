@@ -1,0 +1,19 @@
+"""Structure-aware graph processing (the paper's contribution).
+
+Public API:
+    Graph construction  : graph.powerlaw_graph / uniform_graph / from_edges
+    Vertex programs     : algorithms.pagerank / sssp / bfs / cc
+    Engines             : engine.StructureAwareEngine (paper),
+                          baseline.BaselineEngine (Gemini-style),
+                          distributed.DistributedEngine (shard_map)
+    BC driver           : engine.betweenness
+"""
+from repro.core import algorithms, degrees, graph, metrics, partition
+from repro.core.baseline import BaselineEngine
+from repro.core.engine import EngineConfig, RunResult, StructureAwareEngine, betweenness
+
+__all__ = [
+    "algorithms", "degrees", "graph", "metrics", "partition",
+    "BaselineEngine", "EngineConfig", "RunResult", "StructureAwareEngine",
+    "betweenness",
+]

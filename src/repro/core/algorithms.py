@@ -1,0 +1,139 @@
+"""Vertex programs: PR, CC, SSSP, BFS (+ BC driver in ``engine.bc``).
+
+Each program supplies the pull-mode update and its *state degree* delta
+(paper §3.3): PR uses Eq. 3 (|rank_curr - rank_next| accumulation), SSSP uses
+Eq. 4 (the smaller of the two results, accumulated on change), CC the
+max-analogue the paper describes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+
+INF = np.float32(1e18)  # finite 'infinity': keeps inf-inf NaNs out of f32 math
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    name: str
+    combine: str  # 'sum' | 'min' | 'max'
+    needs_symmetric: bool
+    monotone_cooling: bool  # True -> barrier repartitioning is sound (PR-like)
+    damping: float = 0.85
+    # init(graph) -> (values (n,), aux (n,)); aux is per-vertex constant data
+    init: Callable[[Graph], tuple[np.ndarray, np.ndarray]] = None
+    # edge_map(src_val, src_aux, w) -> message
+    edge_map: Callable[[Array, Array, Array], Array] = None
+    # apply(old_block, agg_block, n_total) -> new_block
+    apply: Callable[[Array, Array, int], Array] = None
+    # sd_delta(old_block, new_block) -> nonnegative activity contribution
+    sd_delta: Callable[[Array, Array], Array] = None
+
+    @property
+    def identity(self) -> np.float32:
+        return {"sum": np.float32(0.0), "min": INF,
+                "max": np.float32(-INF)}[self.combine]
+
+
+def pagerank(damping: float = 0.85) -> VertexProgram:
+    def init(g: Graph):
+        vals = np.full(g.n, 1.0 / g.n, dtype=np.float32)
+        aux = np.maximum(g.out_deg, 1).astype(np.float32)
+        return vals, aux
+
+    def edge_map(src_val, src_aux, w):
+        del w
+        return src_val / src_aux
+
+    def apply(old, agg, n_total):
+        del old
+        return (1.0 - damping) / n_total + damping * agg
+
+    def sd_delta(old, new):  # Eq. 3
+        return jnp.abs(new - old)
+
+    return VertexProgram(name="pagerank", combine="sum", needs_symmetric=False,
+                         monotone_cooling=True, damping=damping, init=init,
+                         edge_map=edge_map, apply=apply, sd_delta=sd_delta)
+
+
+def sssp(source: int = 0) -> VertexProgram:
+    def init(g: Graph):
+        vals = np.full(g.n, INF, dtype=np.float32)
+        vals[source] = 0.0
+        return vals, np.zeros(g.n, dtype=np.float32)
+
+    def edge_map(src_val, src_aux, w):
+        del src_aux
+        return src_val + w
+
+    def apply(old, agg, n_total):
+        del n_total
+        return jnp.minimum(old, agg)
+
+    def sd_delta(old, new):  # Eq. 4: min of the two results, on change
+        return jnp.where(new < old, jnp.minimum(new, old), 0.0)
+
+    return VertexProgram(name="sssp", combine="min", needs_symmetric=False,
+                         monotone_cooling=False, init=init, edge_map=edge_map,
+                         apply=apply, sd_delta=sd_delta)
+
+
+def bfs(source: int = 0) -> VertexProgram:
+    def init(g: Graph):
+        vals = np.full(g.n, INF, dtype=np.float32)
+        vals[source] = 0.0
+        return vals, np.zeros(g.n, dtype=np.float32)
+
+    def edge_map(src_val, src_aux, w):
+        del src_aux, w
+        return src_val + 1.0
+
+    def apply(old, agg, n_total):
+        del n_total
+        return jnp.minimum(old, agg)
+
+    def sd_delta(old, new):
+        return jnp.where(new < old, 1.0, 0.0)
+
+    return VertexProgram(name="bfs", combine="min", needs_symmetric=False,
+                         monotone_cooling=False, init=init, edge_map=edge_map,
+                         apply=apply, sd_delta=sd_delta)
+
+
+def cc() -> VertexProgram:
+    """Connected components via max-label propagation (paper: 'take a
+    maximum'); requires the symmetrized graph."""
+
+    def init(g: Graph):
+        return np.arange(g.n, dtype=np.float32), np.zeros(g.n, np.float32)
+
+    def edge_map(src_val, src_aux, w):
+        del src_aux, w
+        return src_val
+
+    def apply(old, agg, n_total):
+        del n_total
+        return jnp.maximum(old, agg)
+
+    def sd_delta(old, new):  # the larger of the two results, on change
+        return jnp.where(new > old, jnp.maximum(new, old), 0.0)
+
+    return VertexProgram(name="cc", combine="max", needs_symmetric=True,
+                         monotone_cooling=False, init=init, edge_map=edge_map,
+                         apply=apply, sd_delta=sd_delta)
+
+
+REGISTRY: dict[str, Callable[..., VertexProgram]] = {
+    "pagerank": pagerank,
+    "sssp": sssp,
+    "bfs": bfs,
+    "cc": cc,
+}

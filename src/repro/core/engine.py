@@ -1,0 +1,416 @@
+"""Structure-aware iteration driver (paper §3–§4, Algorithms 1–3).
+
+The engine executes one vertex program over a :class:`PartitionPlan`:
+
+  * hot-labelled blocks run **sequentially** within an iteration (the paper's
+    asynchronous mode — each block sees the freshest values, Maiter-style
+    delta propagation through the hubs);
+  * cold-labelled blocks run **batched** from a post-hot snapshot (the
+    paper's synchronous mode);
+  * the scheduler picks the top-PSD m hot + n cold blocks per iteration
+    (Alg. 3) and the repartitioner re-labels blocks on a growing cadence
+    (Alg. 2);
+  * convergence is SUM_j PSD(j) < T2 (§4), with unvisited blocks carrying an
+    UNSEEN sentinel so the whole graph is covered at least once.
+
+Correctness beyond the paper's prose: partial scheduling needs a staleness
+signal — when block j's vertices change, downstream blocks (containing j's
+out-neighbours) must become schedulable again even if their own PSD already
+decayed to 0 (the paper's 'cold partitions can re-heat'). We precompute the
+block->affected-blocks adjacency once (host, O(m)) and bump downstream PSDs
+after each iteration. Without this, min/max programs can terminate with
+stale values; with it, every engine run reaches the same fixpoint as the
+synchronous baseline (tested property).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import state as state_lib
+from repro.core.algorithms import VertexProgram
+from repro.core.graph import Graph, symmetrize
+from repro.core.metrics import Metrics, Timer
+from repro.core.partition import EdgeStorage, PartitionPlan, build_plan
+from repro.core.repartition import RepartitionState
+from repro.core.schedule import Scheduler, Selection
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    block_size: int = 256
+    width: int = 8  # W = m + n (paper: worker count)
+    i2: int = 4  # cold-admission cadence (paper I2)
+    cold_frac: float = 0.25  # n/W; paper requires m > n
+    repartition_interval: int = 4  # paper I1 (grows over time)
+    repartition_growth: float = 1.5
+    hot_inner_iters: int = 8  # async hot mode: block-local Gauss-Seidel
+    hot_ratio: float = 0.1
+    sample_frac: float = 0.1
+    alpha: float | None = None  # Eq. 1 alpha; None -> suggest_alpha
+    t2: float = 1e-6  # paper's default convergence threshold
+    max_iterations: int = 100000
+    stale_eps: float = 1e-12  # PSD above this marks downstream blocks dirty
+    use_pallas: bool = False  # sum-combine via the Pallas spmv kernel
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RunResult:
+    values: np.ndarray  # indexed by ORIGINAL vertex id
+    metrics: Metrics
+    history: list  # per-iteration dicts (for convergence curves)
+
+
+def _combine_local(program: VertexProgram, msg, dst_local, block_size,
+                   use_pallas: bool):
+    if program.combine == "sum":
+        if use_pallas:
+            from repro.kernels import ops as kops
+            return kops.edge_block_sum(msg, dst_local, block_size)
+        return jnp.zeros(block_size, jnp.float32).at[dst_local].add(msg)
+    if program.combine == "min":
+        return jnp.full(block_size, program.identity).at[dst_local].min(msg)
+    return jnp.full(block_size, program.identity).at[dst_local].max(msg)
+
+
+def make_block_processor(program: VertexProgram, store: EdgeStorage, aux,
+                         block_size: int, n_live: int, n_total: int,
+                         use_pallas: bool):
+    """Returns (process_one, gids): the pull-mode update for one block row of
+    one storage group. Shared by the local and shard_map engines."""
+    src = jnp.asarray(store.src)
+    dstl = jnp.asarray(store.dst_local)
+    ew = jnp.asarray(store.w)
+    evalid = jnp.asarray(store.valid)
+    gids = jnp.asarray(store.block_ids, dtype=jnp.int32)
+    c = block_size
+
+    def process_one(values, row):
+        e_src = src[row]
+        msg = program.edge_map(values[e_src], aux[e_src], ew[row])
+        msg = jnp.where(evalid[row], msg, program.identity)
+        agg = _combine_local(program, msg, dstl[row], c, use_pallas)
+        base = gids[row] * c
+        old = lax.dynamic_slice(values, (base,), (c,))
+        new = program.apply(old, agg, n_total)
+        vmask = (base + jnp.arange(c)) < n_live
+        new = jnp.where(vmask, new, old)
+        delta = jnp.where(vmask, program.sd_delta(old, new), 0.0)
+        cnt = jnp.maximum(vmask.sum(), 1)
+        # (mean, max) per-block deltas: mean is the paper's PSD; max feeds the
+        # sound staleness bound (mean-based coupling under-estimates when the
+        # delta mass is concentrated on a hub).
+        return base, new, delta.sum() / cnt, delta.max()
+
+    def process_iterated(values, row, t_inner):
+        """Asynchronous hot mode, TPU-native: the block's edge slice is
+        VMEM-resident, so re-applying the block update t_inner times costs
+        ONE partition load but advances intra-block dependency chains
+        t_inner hops (the paper's per-vertex async propagation, at block
+        granularity). Writes only within the block's own range."""
+        base = gids[row] * c
+        old = lax.dynamic_slice(values, (base,), (c,))
+
+        def inner(_, vals):
+            _, new, _, _ = process_one(vals, row)
+            return lax.dynamic_update_slice(vals, new, (base,))
+
+        vals2 = lax.fori_loop(0, t_inner, inner, values)
+        newb = lax.dynamic_slice(vals2, (base,), (c,))
+        vmask = (base + jnp.arange(c)) < n_live
+        delta = jnp.where(vmask, program.sd_delta(old, newb), 0.0)
+        cnt = jnp.maximum(vmask.sum(), 1)
+        return base, newb, delta.sum() / cnt, delta.max()
+
+    return process_one, process_iterated, gids
+
+
+class StructureAwareEngine:
+    """Paper pipeline: build plan -> iterate (schedule, process, repartition)."""
+
+    def __init__(self, graph: Graph, program: VertexProgram,
+                 config: EngineConfig = EngineConfig()):
+        self.program = program
+        self.config = config
+        g = symmetrize(graph) if program.needs_symmetric else graph
+        self.plan = build_plan(
+            g, block_size=config.block_size, alpha=config.alpha,
+            sample_frac=config.sample_frac, hot_ratio=config.hot_ratio,
+            seed=config.seed)
+        vals0, aux0 = program.init(g)  # original ids ...
+        self.values0 = vals0[self.plan.order]  # ... permuted to plan order
+        self.aux = jnp.asarray(aux0[self.plan.order])
+        self._init_dead()
+        # Pad the value vector so every block's (base, block_size) slice is
+        # in-bounds: lax.dynamic_slice CLAMPS out-of-range starts, which would
+        # silently corrupt the last block's writes.
+        p = self.plan
+        self._values_len = max(p.num_blocks * p.block_size, p.graph.n)
+        pad = self._values_len - p.graph.n
+        if pad:
+            self.values0 = np.concatenate(
+                [self.values0, np.zeros(pad, dtype=self.values0.dtype)])
+        self._block_affects = self._build_block_affects()
+        self._coupling = self._build_coupling_matrix()
+        self._post = jax.jit(self._make_post())
+        self._fns: dict = {}
+
+    # -- one-time host preprocessing ---------------------------------------
+    def _init_dead(self):
+        """Dead partition: processed once at start (§3.2) — apply() with the
+        identity aggregate, after which these vertices are final."""
+        p = self.plan
+        if p.n_dead == 0:
+            return
+        dead = slice(p.n_live, p.graph.n)
+        old = jnp.asarray(self.values0[dead])
+        agg = jnp.full(p.n_dead, 0.0 if self.program.combine == "sum"
+                       else self.program.identity, jnp.float32)
+        self.values0 = np.array(self.values0)
+        self.values0[dead] = np.asarray(
+            self.program.apply(old, agg, p.graph.n))
+
+    def _build_block_affects(self) -> list[tuple[np.ndarray, np.ndarray]]:
+        """block j -> (target blocks, coupling weights).
+
+        Soundness: with v = MAX per-vertex delta in block j, the delta mass
+        entering block b is <= v * sum_{u in j} min(edges(u->b)/outdeg(u), 1)
+        <= v * min(W_jb, C_j), so b's mean-PSD can move by at most
+        decay * v * min(W_jb, C) / C. For min/max programs improvements
+        propagate undiminished and unsplit, so the coupling is 1 on every
+        reachable target (correctness over tightness)."""
+        p = self.plan
+        g = p.graph
+        c = p.block_size
+        mass_like = self.program.combine == "sum"
+        out: list[tuple[np.ndarray, np.ndarray]] = []
+        for b in range(p.num_blocks):
+            lo, hi = p.block_range(b)
+            dsts = g.out_dst[g.out_indptr[lo]:g.out_indptr[hi]]
+            blocks, counts = np.unique(dsts // c, return_counts=True)
+            keep = blocks < p.num_blocks
+            blocks, counts = blocks[keep], counts[keep]
+            if mass_like:
+                wts = (np.minimum(counts, c) / c).astype(np.float32)
+            else:
+                wts = np.ones(blocks.size, dtype=np.float32)
+            out.append((blocks.astype(np.int64), wts))
+        return out
+
+    def _build_coupling_matrix(self) -> np.ndarray:
+        """Dense (P, P) staleness-coupling matrix (decay folded in): the
+        device-side bump is the max-product matvec
+        ``bump_b = max_j dmax_j * K[j, b]``."""
+        p = self.plan
+        decay = (self.program.damping if self.program.combine == "sum"
+                 else 1.0)
+        k = np.zeros((p.num_blocks, p.num_blocks), dtype=np.float32)
+        for j, (tgt, wts) in enumerate(self._block_affects):
+            k[j, tgt] = wts * decay
+        return k
+
+    def _make_post(self):
+        coupling = jnp.asarray(self._coupling)
+        eps = self.config.stale_eps
+
+        def post(psd, dmax):
+            """Consume dmax: re-arm downstream blocks, then reset."""
+            d = jnp.where(dmax > eps, dmax, 0.0)
+            bump = jnp.max(d[:, None] * coupling, axis=0)
+            psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
+            return psd, jnp.zeros_like(dmax)
+        return post
+
+    # -- jitted block processing -------------------------------------------
+    def _get_fn(self, store_key: str, sequential: bool) -> Callable:
+        key = (store_key, sequential)
+        if key in self._fns:
+            return self._fns[key]
+        store: EdgeStorage = getattr(self.plan, store_key)
+        program, cfg, plan = self.program, self.config, self.plan
+        c = plan.block_size
+        width = cfg.width
+        t_inner = max(cfg.hot_inner_iters, 1)
+        process_one, process_iterated, gids = make_block_processor(
+            program, store, self.aux, c, plan.n_live, plan.graph.n,
+            cfg.use_pallas)
+
+        def write_one(values, psd, dmax, base, new, psd_val, dmax_val, gid,
+                      ok):
+            cur = lax.dynamic_slice(values, (base,), (c,))
+            values = lax.dynamic_update_slice(
+                values, jnp.where(ok, new, cur), (base,))
+            psd = jnp.where(ok, psd.at[gid].set(psd_val), psd)
+            dmax = jnp.where(ok, dmax.at[gid].set(dmax_val), dmax)
+            return values, psd, dmax
+
+        if sequential:  # async mode: later blocks see earlier updates
+            def run(values, psd, dmax, rows, slot_ok):
+                def body(i, carry):
+                    values, psd, dmax = carry
+                    row = rows[i]
+                    base, new, psd_val, dmax_val = process_iterated(
+                        values, row, t_inner)
+                    return write_one(values, psd, dmax, base, new, psd_val,
+                                     dmax_val, gids[row], slot_ok[i])
+                return lax.fori_loop(0, width, body, (values, psd, dmax))
+        else:  # sync mode: all blocks read the same snapshot
+            def run(values, psd, dmax, rows, slot_ok):
+                bases, news, psd_vals, dmax_vals = jax.vmap(
+                    lambda r: process_one(values, r))(rows)
+
+                def body(i, carry):
+                    values, psd, dmax = carry
+                    return write_one(values, psd, dmax, bases[i], news[i],
+                                     psd_vals[i], dmax_vals[i],
+                                     gids[rows[i]], slot_ok[i])
+                return lax.fori_loop(0, width, body, (values, psd, dmax))
+
+        fn = jax.jit(run, donate_argnums=(0, 1, 2))
+        self._fns[key] = fn
+        return fn
+
+    # -- host-side dispatch ---------------------------------------------------
+    def _dispatch(self, values, psd, dmax, block_ids: np.ndarray,
+                  sequential: bool):
+        """Route global block ids to their storage group and run."""
+        p, w = self.plan, self.config.width
+        for store_key, cond in (("hot", block_ids < p.barrier_block),
+                                ("cold", block_ids >= p.barrier_block)):
+            ids = block_ids[cond]
+            if ids.size == 0:
+                continue
+            offset = 0 if store_key == "hot" else p.barrier_block
+            for at in range(0, ids.size, w):
+                chunk = ids[at:at + w]
+                rows = np.zeros(w, dtype=np.int32)
+                ok = np.zeros(w, dtype=bool)
+                rows[:chunk.size] = (chunk - offset).astype(np.int32)
+                ok[:chunk.size] = True
+                fn = self._get_fn(store_key, sequential)
+                values, psd, dmax = fn(values, psd, dmax, jnp.asarray(rows),
+                                       jnp.asarray(ok))
+        return values, psd, dmax
+
+    def _account(self, metrics: Metrics, ids: np.ndarray):
+        p = self.plan
+        for b in ids:
+            lo, hi = p.block_range(int(b))
+            metrics.updates += hi - lo
+            metrics.block_loads += 1
+            metrics.bytes_loaded += p.block_bytes(int(b))
+            store = p.hot if b < p.barrier_block else p.cold
+            row = int(b) if b < p.barrier_block else int(b) - p.barrier_block
+            metrics.edges_processed += int(store.edges[row])
+
+    # -- main loop ----------------------------------------------------------
+    def run(self, max_iterations: int | None = None) -> RunResult:
+        cfg, p = self.config, self.plan
+        max_it = max_iterations or cfg.max_iterations
+        mode = "barrier" if self.program.monotone_cooling else "universal"
+        rep = RepartitionState.create(
+            p.num_blocks, p.barrier_block, mode,
+            interval=cfg.repartition_interval, growth=cfg.repartition_growth)
+        # Per-block pruning floor: skipping blocks below t2/P is safe — if
+        # every block were below it, SUM(psd) < t2 and we are converged.
+        sched = Scheduler(width=cfg.width, i2=cfg.i2, cold_frac=cfg.cold_frac,
+                          min_psd=cfg.t2 / max(p.num_blocks, 1))
+
+        values = jnp.asarray(self.values0)
+        psd = jnp.asarray(state_lib.init_psd(p.num_blocks))
+        dmax = jnp.zeros(p.num_blocks, jnp.float32)
+        psd_host = np.asarray(psd)
+        metrics = Metrics()
+        history = []
+
+        with Timer() as t:
+            it = 0
+            while it < max_it:
+                sel: Selection = sched.select(it, psd_host, rep.is_hot)
+                if sel.hot_ids.size == 0 and sel.cold_ids.size == 0:
+                    break
+                values, psd, dmax = self._dispatch(
+                    values, psd, dmax, sel.hot_ids, sequential=True)
+                values, psd, dmax = self._dispatch(
+                    values, psd, dmax, sel.cold_ids, sequential=False)
+                processed = np.concatenate([sel.hot_ids, sel.cold_ids])
+                self._account(metrics, processed)
+                # staleness propagation (device-side max-product matvec):
+                # a max per-vertex delta v in block j can move block b's
+                # mean-PSD by at most decay * v * coupling(j->b).
+                psd, dmax = self._post(psd, dmax)
+                psd_host = np.asarray(psd)
+                rep.maybe_repartition(it, psd_host, cfg.hot_ratio)
+                history.append({
+                    "iteration": it,
+                    "psd_sum": float(psd_host[psd_host <
+                                              state_lib.UNSEEN].sum()),
+                    "unseen": int((psd_host >= state_lib.UNSEEN).sum()),
+                    "hot_blocks": int(rep.is_hot.sum()),
+                    "scheduled": int(processed.size),
+                })
+                it += 1
+                if state_lib.converged(psd_host, cfg.t2):
+                    metrics.converged = True
+                    break
+        metrics.iterations = it
+        metrics.wall_time_s = t.elapsed
+        out = np.asarray(values)[self.plan.inv]  # back to original ids
+        return RunResult(values=out, metrics=metrics, history=history)
+
+
+# -- Betweenness centrality (Brandes, sampled sources) -----------------------
+def betweenness(graph: Graph, sources: list[int],
+                config: EngineConfig = EngineConfig(),
+                structure_aware: bool = True) -> tuple[np.ndarray, Metrics]:
+    """BC per paper's algorithm set: the forward BFS waves run through the
+    structure-aware engine (or the baseline when structure_aware=False); the
+    path-counting and dependency accumulation are level-synchronous dense
+    sweeps (they are single passes, not iterative-convergent phases)."""
+    from repro.core import algorithms as algos
+    from repro.core.baseline import BaselineEngine
+
+    n = graph.n
+    bc = np.zeros(n, dtype=np.float64)
+    total = Metrics()
+    s_arr, d_arr, _ = _coo(graph)
+    for s in sources:
+        prog = algos.bfs(source=s)
+        eng = (StructureAwareEngine(graph, prog, config) if structure_aware
+               else BaselineEngine(graph, prog, config))
+        res = eng.run()
+        dist = res.values
+        for k, v in res.metrics.as_dict().items():
+            if isinstance(v, (int, float)) and k != "converged":
+                setattr(total, k, getattr(total, k) + v)
+        # sigma: #shortest paths, level-synchronous accumulation
+        finite = dist < algos.INF / 2
+        max_lvl = int(dist[finite].max()) if finite.any() else 0
+        sigma = np.zeros(n, dtype=np.float64)
+        sigma[s] = 1.0
+        on_sp = dist[d_arr] == dist[s_arr] + 1
+        for lvl in range(1, max_lvl + 1):
+            e = on_sp & (dist[d_arr] == lvl)
+            np.add.at(sigma, d_arr[e], sigma[s_arr[e]])
+        # delta: backward dependency accumulation
+        delta = np.zeros(n, dtype=np.float64)
+        for lvl in range(max_lvl, 0, -1):
+            e = on_sp & (dist[d_arr] == lvl)
+            contrib = sigma[s_arr[e]] / np.maximum(sigma[d_arr[e]], 1.0) * \
+                (1.0 + delta[d_arr[e]])
+            np.add.at(delta, s_arr[e], contrib)
+        delta[s] = 0.0
+        bc += delta
+    return bc, total
+
+
+def _coo(g: Graph):
+    dst = np.repeat(np.arange(g.n, dtype=np.int64), g.in_deg)
+    return g.in_src.astype(np.int64), dst, g.in_w

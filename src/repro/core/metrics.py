@@ -1,0 +1,34 @@
+"""Accounting the paper evaluates on: runtime, updates, partition loads.
+
+On TPU/CPU we cannot read an L3-miss counter, but the schedule makes the
+quantity *exact*: every scheduled block is one partition load (HBM->VMEM
+refill of its edge slice + vertex slice). ``bytes_loaded`` is the I/O proxy
+(paper §2.1), ``updates`` the convergence-work proxy (§2.2 contribution 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class Metrics:
+    iterations: int = 0
+    updates: int = 0  # vertex apply() executions
+    edges_processed: int = 0
+    block_loads: int = 0  # partition loads (cache/I-O proxy)
+    bytes_loaded: int = 0
+    wall_time_s: float = 0.0
+    converged: bool = False
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.t0

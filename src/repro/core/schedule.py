@@ -1,0 +1,53 @@
+"""Adaptive partition scheduling (paper Alg. 3, §4).
+
+Each iteration selects the m highest-PSD hot blocks; every I2-th iteration it
+also admits the n highest-PSD cold blocks, with m + n = the worker count
+(paper: the CPU count; here: the schedule width = devices on the data axis x
+blocks per device) and m > n. When no hot blocks remain, the full width goes
+to the highest-PSD cold blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    hot_ids: np.ndarray  # (<=m,) global block ids scheduled in async mode
+    cold_ids: np.ndarray  # (<=n or <=W,) block ids scheduled in sync mode
+
+
+@dataclasses.dataclass
+class Scheduler:
+    width: int  # W = m + n
+    i2: int = 4  # cold-admission cadence
+    cold_frac: float = 0.25  # n = floor(W * cold_frac) (m > n per the paper)
+    min_psd: float = 0.0  # prune individually-converged blocks (see engine)
+
+    def select(self, iteration: int, psd: np.ndarray,
+               is_hot: np.ndarray) -> Selection:
+        w = self.width
+        live = psd >= self.min_psd  # safe: if ALL pruned, sum(psd) < T2
+        hot_ids = np.flatnonzero(is_hot & live)
+        cold_ids = np.flatnonzero(~is_hot & live)
+        if hot_ids.size == 0:  # "only remains P_cold"
+            pick = cold_ids[np.argsort(-psd[cold_ids], kind="stable")][:w]
+            return Selection(hot_ids=np.empty(0, np.int64), cold_ids=pick)
+
+        if self.i2 and iteration % self.i2 == 0:
+            # I2 iteration: m hot + n cold (m > n), paper Alg. 3.
+            n = int(w * self.cold_frac)
+            m = w - n
+        else:
+            # non-I2 iteration: hot partitions have absolute priority...
+            m, n = w, 0
+        hot_pick = hot_ids[np.argsort(-psd[hot_ids], kind="stable")][:m]
+        # ...but scheduling is work-conserving: idle workers (fewer live hot
+        # blocks than m) take the next-hottest cold blocks instead of
+        # idling — "ensure that the hot partition is sufficiently computed"
+        # constrains priority, not utilization.
+        n = w - hot_pick.size if hot_pick.size < m else n
+        cold_pick = cold_ids[np.argsort(-psd[cold_ids], kind="stable")][:n]
+        return Selection(hot_ids=hot_pick, cold_ids=cold_pick)

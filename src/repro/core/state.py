@@ -1,0 +1,38 @@
+"""Partition state degree (PSD) bookkeeping + convergence test (§3.3, §4).
+
+PSD(j) is the mean per-vertex state-degree delta from the most recent time
+block j was processed (the paper accumulates SD between scheduling events;
+the per-processing mean is what drives both the priority queue and the
+SUM(PSD) < T2 convergence test — a forever-growing accumulator could never
+cross T2, so 'accumulation' is interpreted per scheduling window; see
+DESIGN.md §7).
+
+Unprocessed blocks carry PSD = UNSEEN (a large sentinel), which (a) gives
+every block first-visit priority and (b) blocks convergence until the whole
+graph has been processed at least once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+UNSEEN = np.float32(1e30)
+
+
+def init_psd(num_blocks: int) -> np.ndarray:
+    return np.full(num_blocks, UNSEEN, dtype=np.float32)
+
+
+def converged(psd: np.ndarray, t2: float) -> bool:
+    """Paper §4: the entire graph converges when sum of PSDs < T2."""
+    return bool(np.asarray(psd, dtype=np.float64).sum() < t2)
+
+
+def psd_threshold(psd: np.ndarray, hot_ratio: float = 0.1) -> float:
+    """Adaptive T1-for-PSD used at repartition time: the hot_ratio quantile of
+    the currently-seen PSDs (the paper reuses the symbol T1 for both the AD
+    and the SD thresholds; we recompute it on the live distribution)."""
+    seen = psd[psd < UNSEEN]
+    if seen.size == 0:
+        return float("inf")
+    q = np.quantile(seen.astype(np.float64), 1.0 - hot_ratio)
+    return float(max(q, 1e-12))

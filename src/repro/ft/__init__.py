@@ -1,0 +1,3 @@
+from repro.ft.straggler import StragglerMonitor
+
+__all__ = ["StragglerMonitor"]

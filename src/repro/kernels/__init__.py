@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (+ jnp oracles) for the framework's compute hot spots.
+
+spmv             : partition edge-block segment-sum (graph engine hot spot)
+flash_attention  : causal GQA online-softmax attention (LM prefill hot spot)
+ref              : pure-jnp oracles
+ops              : jit'd dispatch (interpret on CPU, Mosaic on TPU)
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_block_sum(msg: jnp.ndarray, dst: jnp.ndarray,
+                   block_size: int) -> jnp.ndarray:
+    """Segment-sum of edge messages into block-local destination slots."""
+    return jnp.zeros(block_size, msg.dtype).at[dst].add(msg)
+
+
+def attention(q, k, v, causal: bool = True, scale: float | None = None):
+    """Reference (quadratic) attention. q: (B, Hq, S, D); k/v: (B, Hkv, S, D)
+    with Hq a multiple of Hkv (GQA)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / d ** 0.5
+    qg = q.reshape(b, hkv, g, s, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def ssd_scan(x, a_log, b, c, dt):
+    """Mamba2 SSD reference: naive per-step recurrence.
+
+    x: (B, S, H, P) inputs, a_log: (H,) state decay log, b/c: (B, S, N)
+    input/output projections (shared across heads), dt: (B, S, H) step.
+    state: (B, H, P, N); y[t] = C[t] . state[t]."""
+    import jax
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+
+    def step(state, inputs):
+        xt, bt, ct, dtt = inputs  # (B,H,P), (B,N), (B,N), (B,H)
+        decay = jnp.exp(dtt * a[None, :])  # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        state = state * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B, S, H, P)

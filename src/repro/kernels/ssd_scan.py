@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: SSD intra-chunk quadratic term (mamba2 hotspot).
+
+The chunked SSD algorithm (models/ssm.py) splits into a small inter-chunk
+recurrence and the dominant *intra-chunk* term
+
+    y[q] = sum_{s<=q} (c_q . b_s) * exp(l_q - l_s) * u[s]        (per head)
+
+which is two MXU matmuls around an elementwise decay mask — exactly one
+(Q x N)(N x Q) -> (Q x Q) Gram tile and one (Q x Q)(Q x P) -> (Q x P)
+product per (sequence-chunk, head) grid cell, all VMEM-resident.
+
+Grid: (B * nc, H). Block shapes: c/b (Q, N), u (Q, P), l (Q, 1) — Q=128,
+N<=128, P<=128 keeps every operand MXU-aligned and the working set
+< 0.5 MiB. Oracle: the y_intra einsum path in models/ssm.py::ssd_chunked
+(itself validated against the naive recurrence in ref.ssd_scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, b_ref, u_ref, l_ref, o_ref, *, q: int):
+    c = c_ref[0].astype(jnp.float32)  # (Q, N)
+    b = b_ref[0].astype(jnp.float32)  # (Q, N)
+    u = u_ref[0].astype(jnp.float32)  # (Q, P)
+    l = l_ref[0].astype(jnp.float32)  # (Q, 1) cumulative log-decay
+    gram = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
+    ldiff = l - l.T  # l_q - l_s
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(ldiff), 0.0)
+    o_ref[0] = jnp.dot(gram * decay, u,
+                       preferred_element_type=jnp.float32).astype(
+        o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(c, b, u, l, interpret: bool = True):
+    """c, b: (G, Q, N); u: (G, Q, P); l: (G, Q) cumulative log-decay.
+    G = batch * num_chunks * heads (pre-flattened). Returns (G, Q, P)."""
+    g, q, n = c.shape
+    p = u.shape[-1]
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, q, p), u.dtype),
+        interpret=interpret,
+    )(c, b, u, l.reshape(g, q, 1))

@@ -1,0 +1,96 @@
+"""Perf hillclimb runner (§Perf): re-lower a cell with a config variant and
+record the roofline-term deltas next to the baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf \
+        --cell qwen3_14b/train_4k/pod16x16 \
+        --name remat_save_dots --set remat_policy=save_dots
+
+Results append to results/perf.json as
+    {cell: {baseline: {...}, variants: {name: {override, result}}}}
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_cell
+
+
+def parse_set(items):
+    out = {}
+    for it in items or []:
+        k, v = it.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch/shape/mesh, e.g. qwen3_14b/train_4k/pod16x16")
+    ap.add_argument("--name", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--out", default="results/perf.json")
+    ap.add_argument("--baseline-from", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    arch, shape, mesh_name = args.cell.split("/")
+    mesh = make_production_mesh(multi_pod=(mesh_name == "pod2x16x16"))
+    override = parse_set(args.set)
+
+    perf = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            perf = json.load(f)
+    entry = perf.setdefault(args.cell, {"variants": {}})
+    if "baseline" not in entry and os.path.exists(args.baseline_from):
+        with open(args.baseline_from) as f:
+            base = json.load(f).get(args.cell)
+        if base:
+            entry["baseline"] = {
+                "result": {k: v for k, v in base.items()
+                           if k != "collectives_hlo_once"},
+                "roofline": analyze_cell(args.cell, base)}
+
+    print(f"[perf] {args.cell} variant={args.name} override={override}")
+    res = dryrun.lower_cell(arch, shape, mesh, mesh_name,
+                            cfg_override=override)
+    entry["variants"][args.name] = {
+        "override": override,
+        "result": {k: v for k, v in res.items()
+                   if k != "collectives_hlo_once"},
+        "roofline": analyze_cell(args.cell, res) if res.get("status") ==
+        "ok" else None,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(perf, f, indent=1, sort_keys=True)
+
+    if res.get("status") == "ok" and entry.get("baseline"):
+        b = entry["baseline"]["roofline"]
+        v = entry["variants"][args.name]["roofline"]
+        for t in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            delta = (v[t] - b[t]) / b[t] * 100 if b[t] else float("nan")
+            print(f"  {t}: {b[t]:.3e} -> {v[t]:.3e}  ({delta:+.1f}%)")
+        print(f"  dominant: {b['dominant']} -> {v['dominant']}; "
+              f"roofline frac {b['roofline_fraction']:.2%} -> "
+              f"{v['roofline_fraction']:.2%}; peak GB "
+              f"{b['peak_gb']:.2f} -> {v['peak_gb']:.2f}")
+    else:
+        print(f"  status: {res.get('status')} {res.get('error', '')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""GSPMD sharding rules for every (arch x shape) cell.
+
+Policy (DESIGN.md §5):
+  * batch shards over ("pod","data") — only gradient all-reduce crosses DCN;
+  * "model" carries TP (attention head/ffn-hidden dims, vocab) and EP
+    (expert dim) — dims shard only when divisible, else stay replicated
+    (the roofline then shows the cost and the hillclimb revisits);
+  * ZeRO-1: optimizer moments additionally shard over "data" on the largest
+    still-unsharded divisible dim;
+  * decode caches shard seq over "model" (flash-decoding combine) and batch
+    over ("pod","data"); long_500k (batch=1) shards seq over ALL axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig, ShapeConfig
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def _spec_for_param(path: str, shape: tuple, mesh: Mesh,
+                    tied: bool = False, embed_d_shard: bool = False) -> P:
+    """Sharding rules keyed on the param path (see module docstring)."""
+    m = "model"
+
+    def last_dim_model(ndim):  # shard trailing dim over model
+        if _div(shape[-1], mesh, m):
+            return P(*([None] * (ndim - 1) + [m]))
+        return P()
+
+    if path.endswith("embed"):
+        # Vocab-sharding the input table turns every lookup into an
+        # all-gather of the whole table; with embed_d_shard (§Perf lever)
+        # untied models shard D instead (local gather). Tied models keep
+        # vocab-sharding — their head matmul contracts over D and a D-shard
+        # would psum (B,S,V).
+        if embed_d_shard and not tied and _div(shape[1], mesh, m):
+            return P(None, m)
+        return P(m, None) if _div(shape[0], mesh, m) else P()
+    if path.endswith(("lm_head",)):
+        return P(None, m) if _div(shape[1], mesh, m) else P()
+    # stacked layer params: leading dim is L
+    if "/attn/" in path or "/cross/" in path:
+        if path.endswith(("wq", "wk", "wv")):
+            return last_dim_model(len(shape))
+        if path.endswith("wo"):
+            return (P(None, m, None) if _div(shape[1], mesh, m) else P())
+    if "/mlp/" in path:
+        if path.endswith(("wg", "wu")):
+            return last_dim_model(len(shape))
+        if path.endswith("wd"):
+            return (P(None, m, None) if _div(shape[1], mesh, m) else P())
+    if "/moe/" in path:
+        if path.endswith("router"):
+            return last_dim_model(len(shape))
+        if path.endswith(("w_gate", "w_up", "w_down")):  # (L, E, a, b): EP
+            if _div(shape[1], mesh, m):
+                return P(None, m, None, None)
+            # fall back to TP on the hidden dim
+            hid = 3 if path.endswith(("w_gate", "w_up")) else 2
+            if _div(shape[hid], mesh, m):
+                spec = [None] * len(shape)
+                spec[hid] = m
+                return P(*spec)
+            return P()
+        if path.endswith(("shared_gate", "shared_up")):
+            return last_dim_model(len(shape))
+        if path.endswith("shared_down"):
+            return (P(None, m, None) if _div(shape[1], mesh, m) else P())
+    if "/ssm/" in path:
+        if path.endswith(("in_x", "in_z", "in_dt")):
+            return last_dim_model(len(shape))
+        if path.endswith("out"):
+            return (P(None, m, None) if _div(shape[1], mesh, m) else P())
+        if path.endswith(("a_log", "dt_bias", "d_skip", "ssm_norm")):
+            return last_dim_model(len(shape))
+    return P()  # norms, conv, biases, small projections: replicated
+
+
+def _is_tied(params_shape: Any) -> bool:
+    return isinstance(params_shape, dict) and "lm_head" not in params_shape
+
+
+def param_specs(params_shape: Any, mesh: Mesh,
+                embed_d_shard: bool = False):
+    """Pytree of NamedSharding matching a (possibly abstract) param tree."""
+    tied = _is_tied(params_shape)
+
+    def one(path, leaf):
+        return NamedSharding(mesh, _spec_for_param(
+            _path_str(path), leaf.shape, mesh, tied, embed_d_shard))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_specs(params_shape: Any, mesh: Mesh,
+                embed_d_shard: bool = False):
+    """Optimizer-moment shardings: param spec + extra 'data' shard on the
+    largest still-unsharded divisible dim (ZeRO-1)."""
+    tied = _is_tied(params_shape)
+
+    def one(path, leaf):
+        base = _spec_for_param(_path_str(path), leaf.shape, mesh, tied,
+                               embed_d_shard)
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        # densest remaining dim first
+        order = sorted(range(len(leaf.shape)),
+                       key=lambda i: -leaf.shape[i])
+        for i in order:
+            if spec[i] is None and _div(leaf.shape[i], mesh, "data") \
+                    and leaf.shape[i] >= mesh.shape["data"] * 8:
+                spec[i] = "data"
+                break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def state_specs(state_shape: Any, mesh: Mesh, zero1: bool = True,
+                embed_d_shard: bool = False):
+    """Shardings for the full TrainState {params, opt{m,v,step}}."""
+    p = param_specs(state_shape["params"], mesh, embed_d_shard)
+    mom = (zero1_specs(state_shape["params"], mesh, embed_d_shard) if zero1
+           else p)
+    return {"params": p,
+            "opt": {"m": mom, "v": mom,
+                    "step": NamedSharding(mesh, P())}}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                batch_size: int | None = None):
+    """Shardings for the input batch dict."""
+    from repro.launch.mesh import batch_axes
+    b = batch_size or shape.global_batch
+    ba = batch_axes(mesh)
+    bspec = ba if _div(b, mesh, ba) else ()
+    out = {}
+    tok_spec = NamedSharding(mesh, P(bspec or None))
+
+    def named(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    out["tokens"] = named(bspec or None, None)
+    if shape.kind == "train":
+        out["targets"] = named(bspec or None, None)
+    if cfg.num_patches:
+        out["patches"] = named(bspec or None, None, None)
+    if cfg.is_encdec:
+        out["frames"] = named(bspec or None, None, None)
+    del tok_spec
+    return out
+
+
+def cache_sharding(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                   cache_shape: Any):
+    """Shardings for the decode cache pytree (see module docstring)."""
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh)
+    b = shape.global_batch
+    long_ctx = b == 1
+    all_axes = tuple(mesh.axis_names)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shp = leaf.shape
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, Hkv, Dh)
+            if long_ctx:
+                seq_ax = all_axes if _div(shp[2], mesh, all_axes) else "model"
+                return NamedSharding(mesh, P(None, None, seq_ax, None, None))
+            bspec = ba if _div(shp[1], mesh, ba) else None
+            seq_ax = "model" if _div(shp[2], mesh, "model") else None
+            return NamedSharding(mesh, P(None, bspec, seq_ax, None, None))
+        if name == "ssm_state":  # (L, B, H, P, N)
+            h_ax = "model" if _div(shp[2], mesh, "model") else None
+            bspec = ba if _div(shp[1], mesh, ba) else None
+            return NamedSharding(mesh, P(None, bspec, h_ax, None, None))
+        if name == "conv":  # (L, B, K-1, CH)
+            bspec = ba if _div(shp[1], mesh, ba) else None
+            return NamedSharding(mesh, P(None, bspec, None, None))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def logits_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                ndim: int = 2):
+    from repro.launch.mesh import batch_axes
+    ba = batch_axes(mesh)
+    b = shape.global_batch
+    bspec = ba if _div(b, mesh, ba) else None
+    v_ax = "model" if _div(cfg.vocab_padded, mesh, "model") else None
+    if ndim == 2:
+        return NamedSharding(mesh, P(bspec, v_ax))
+    return NamedSharding(mesh, P(bspec, None, v_ax))

@@ -1,0 +1,167 @@
+"""End-to-end training driver (deliverable b: the e2e example).
+
+Runs on whatever devices exist (CPU here, pods in production): builds a
+("data","model") mesh over local devices, shards params/optimizer with the
+same rules as the dry-run, streams the synthetic pipeline, checkpoints on a
+cadence + SIGTERM, auto-resumes from the latest checkpoint, feeds the
+straggler monitor, and (optionally) simulates a mid-run crash to exercise
+restart (--fail-at).
+
+Example (trains a ~100M-param llama-style model):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3p2_1b \
+        --reduced --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import sys
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.ckpt import CheckpointManager
+from repro.data import SyntheticLM
+from repro.ft import StragglerMonitor
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as model_lib
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3p2_1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="width multiplier on the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate a crash after this step (FT test)")
+    ap.add_argument("--expert-rebalance", action="store_true",
+                    help="structure-aware expert re-binning (MoE archs): "
+                         "the paper's dynamic repartitioning at runtime")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = configs.reduced(cfg)
+        if args.scale != 1.0:
+            s = args.scale
+            cfg = dataclasses.replace(
+                cfg, d_model=int(cfg.d_model * s),
+                d_ff=int(cfg.d_ff * s) if cfg.d_ff else 0,
+                num_layers=max(int(cfg.num_layers * s), 1))
+    mesh = make_host_mesh(model=args.model_axis)
+    opt_cfg = AdamWConfig(peak_lr=args.lr, total_steps=args.steps,
+                          warmup_steps=min(20, args.steps // 5 + 1))
+    step_fn = make_train_step(cfg, opt_cfg, num_microbatches=args.micro)
+
+    params_shape = jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(args.seed)))
+    state_shape = {"params": params_shape,
+                   "opt": {"m": params_shape, "v": params_shape,
+                           "step": jax.ShapeDtypeStruct((), np.int32)}}
+    sspecs = shard_lib.state_specs(state_shape, mesh)
+    repl = NamedSharding(mesh, P())
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    if ckpt and ckpt.latest_step() is not None:
+        state, meta = ckpt.restore(shardings=sspecs)
+        state["opt"]["step"] = jax.device_put(
+            np.asarray(state["opt"]["step"], np.int32), repl)
+        start_step = meta["step"]
+        print(f"[train] resumed from step {start_step}")
+    else:
+        params = jax.jit(
+            lambda k: model_lib.init_params(cfg, k),
+            out_shardings=sspecs["params"])(jax.random.PRNGKey(args.seed))
+        state = {"params": params, "opt": adamw_init(params)}
+        state["opt"] = jax.device_put(state["opt"], sspecs["opt"])
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    bspec = NamedSharding(mesh, P("data", None))
+    jstep = jax.jit(step_fn, in_shardings=(sspecs, {"tokens": bspec,
+                                                    "targets": bspec}),
+                    out_shardings=(sspecs, None), donate_argnums=(0,))
+
+    monitor = StragglerMonitor()
+    rebalancer = None
+    if args.expert_rebalance and cfg.num_experts:
+        from repro.train.expert_balance import (ExpertRebalancer,
+                                                permute_expert_axis)
+        rebalancer = ExpertRebalancer(
+            num_experts=cfg.experts_eff,
+            num_shards=max(mesh.shape.get("model", 1), 1),
+            interval=max(args.steps // 8, 5))
+    stop = {"now": False}
+    signal.signal(signal.SIGTERM, lambda *_: stop.update(now=True))
+
+    losses = []
+    for step in range(start_step, args.steps):
+        t0 = time.perf_counter()
+        batch = jax.device_put(data.batch(step), bspec)
+        state, metrics = jstep(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        dt = time.perf_counter() - t0
+        health = monitor.observe(dt)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+                  + (" STRAGGLER" if health["straggler"] else ""),
+                  flush=True)
+        if rebalancer is not None:
+            perm = rebalancer.observe(
+                np.asarray(metrics["expert_load"], np.float64), step + 1)
+            if perm is not None:
+                # function-preserving expert relabel -> balanced EP shards
+                state["params"] = permute_expert_axis(state["params"], perm)
+                for mom in ("m", "v"):
+                    state["opt"][mom] = permute_expert_axis(
+                        state["opt"][mom], perm)
+                print(f"[train] step={step} expert rebalance #"
+                      f"{rebalancer.moves} applied")
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, state)
+        if args.fail_at is not None and step + 1 >= args.fail_at:
+            print(f"[train] simulating failure at step {step + 1}")
+            if ckpt:
+                ckpt.save(step + 1, state)
+                ckpt.wait()
+            sys.exit(42)
+        if stop["now"]:
+            print("[train] SIGTERM: checkpointing and exiting")
+            if ckpt:
+                ckpt.save(step + 1, state)
+                ckpt.wait()
+            sys.exit(0)
+    if ckpt:
+        ckpt.save(args.steps, state)
+        ckpt.wait()
+    if losses:
+        print(f"[train] done: first loss {losses[0]:.4f} -> last "
+              f"{losses[-1]:.4f}")
+    else:
+        print(f"[train] nothing to do (resumed at step {start_step} "
+              f">= {args.steps})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Attention paths: chunked online-softmax (train/prefill), decode w/ cache.
+
+Layout convention: activations (B, S, H, Dh).
+
+* ``chunked_attention`` is the XLA twin of kernels/flash_attention.py: an
+  online-softmax over KV chunks via scan/fori, so the (S x S) logits never
+  materialize — required for prefill_32k (a dense 32k^2 x heads logits tensor
+  would be ~2 GiB/head) and used for train_4k as well. On TPU the Pallas
+  kernel takes over via the use_pallas flag; the dry-run lowers this path.
+* ``decode_attention`` does one-token attention against a (possibly
+  seq-sharded) KV cache: softmax over a sharded axis is just two sharded
+  reductions, which GSPMD turns into the flash-decoding combine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def full_attention(q, k, v, causal: bool = True):
+    """Reference quadratic path (small S / tests). (B, S, H, D) layout."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "chunk_q", "chunk_k",
+                                             "dynamic_skip"))
+def chunked_attention(q, k, v, causal: bool = True, chunk_q: int = 512,
+                      chunk_k: int = 512, dynamic_skip: bool = False):
+    """Flash-style attention in pure JAX. q: (B, S, Hq, D), k/v: (B, S, Hkv, D).
+
+    dynamic_skip=True prunes fully-masked KV chunks with a dynamic loop
+    bound — 2x less work on the causal half, but the dynamic while_loop is
+    NOT reverse-differentiable, so it is for inference paths only. Training
+    uses the static bound + masking.
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if s % chunk_q or s % chunk_k:
+        return full_attention(q, k, v, causal)
+    nq, nk = s // chunk_q, s // chunk_k
+    scale = d ** -0.5
+    qc = q.reshape(b, nq, chunk_q, hkv, g, d)
+    kc = k.reshape(b, nk, chunk_k, hkv, d)
+    vc = v.reshape(b, nk, chunk_k, hkv, d)
+
+    def q_block(qi, q_i):
+        # q_i: (B, Cq, Hkv, G, D)
+        m0 = jnp.full((b, hkv, g, chunk_q, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk_q, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, chunk_q, d), jnp.float32)
+
+        def kv_step(ki, carry):
+            m, l, acc = carry
+            k_i = lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
+            v_i = lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk",
+                                q_i.astype(jnp.float32),
+                                k_i.astype(jnp.float32)) * scale
+            if causal:
+                rows = qi * chunk_q + lax.broadcasted_iota(
+                    jnp.int32, (chunk_q, chunk_k), 0)
+                cols = ki * chunk_k + lax.broadcasted_iota(
+                    jnp.int32, (chunk_q, chunk_k), 1)
+                logits = jnp.where((rows >= cols)[None, None, None],
+                                   logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+            p = jnp.exp(logits - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                           v_i.astype(jnp.float32))
+            return m_new, l, acc
+
+        # causal + dynamic_skip: only k chunks up to the diagonal (dynamic
+        # bound -> while_loop, inference only); else static nk (differentiable)
+        if causal and dynamic_skip:
+            upper = qi * chunk_q // chunk_k + 1
+        else:
+            upper = nk
+        m, l, acc = lax.fori_loop(0, upper, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(l, 1e-30)
+        return jnp.einsum("bhgqd->bqhgd", out)
+
+    outs = lax.map(lambda args: q_block(*args),
+                   (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1)  # (B, nq, Cq, Hkv, G, D)
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """One-step attention. q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D);
+    pos: scalar int (tokens [0, pos] are valid, [pos] being the new one)."""
+    b, _, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (jnp.arange(smax) <= pos)[None, None, None]
+    logits = jnp.where(valid, logits, NEG_INF)
+    # sharded-softmax-friendly: max/sum reduce over the (possibly sharded)
+    # cache axis; GSPMD inserts the partial-softmax combine
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def update_cache(cache_k, cache_v, new_k, new_v, pos):
+    """Write new_k/new_v ((B, T, Hkv, D)) at [pos, pos+T)."""
+    cache_k = lax.dynamic_update_slice(cache_k, new_k.astype(cache_k.dtype),
+                                       (0, pos, 0, 0))
+    cache_v = lax.dynamic_update_slice(cache_v, new_v.astype(cache_v.dtype),
+                                       (0, pos, 0, 0))
+    return cache_k, cache_v

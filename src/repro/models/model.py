@@ -1,0 +1,564 @@
+"""Unified model assembly for all 10 assigned architectures.
+
+One decoder stack parameterized by ArchConfig covers dense / MoE / SSM /
+hybrid / VLM-stub; whisper adds an encoder stack + cross-attention. Layer
+params are stacked (L, ...) and consumed by lax.scan (remat-wrapped in the
+train path); caches are stacked the same way and threaded through the scan.
+
+Entry points:
+    init_params(cfg, key)                      -> param pytree (f32 masters)
+    forward(params, cfg, batch)                -> logits (train/prefill math)
+    init_cache(cfg, batch, max_seq)            -> cache pytree
+    prefill(params, cfg, batch, cache)         -> (last logits, cache)
+    decode_step(params, cfg, token, cache)     -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_rope, dense_init, embed_init,
+                                 rms_norm, swiglu)
+
+Params = dict
+
+# Launcher-installed activation sharding for attention (see
+# set_attention_sharding): (batch_axes tuple, model_axis name) or None.
+_ATTN_SHARDING: list = [None]
+
+
+def set_attention_sharding(batch_axes, model_axis):
+    """Install (or clear, with None) the attention activation sharding used
+    when cfg.shard_attn is on. Called by the launch layer per mesh."""
+    _ATTN_SHARDING[0] = ((tuple(batch_axes), model_axis)
+                         if model_axis else None)
+
+
+def _constrain_bshd(x, cfg):
+    if not cfg.shard_attn or _ATTN_SHARDING[0] is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    batch_axes, model_axis = _ATTN_SHARDING[0]
+    spec = P(batch_axes or None, None, model_axis, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _attn_params(key, cfg: ArchConfig, d: int):
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.q_heads_eff, cfg.kv_heads_eff
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh)),
+        "wk": dense_init(ks[1], (d, hkv * dh)),
+        "wv": dense_init(ks[2], (d, hkv * dh)),
+        "wo": dense_init(ks[3], (hq * dh, d),
+                         scale=(cfg.num_heads * dh) ** -0.5),
+    }
+    # EXACT padding: zero the padded head slices (wq/wk/wv columns, wo
+    # rows). Padded q heads then see uniform attention over zero values ->
+    # zero output -> zero wo contribution, and all their grads vanish.
+    if hq > cfg.num_heads:
+        real = cfg.num_heads * dh
+        p["wq"] = p["wq"].at[:, real:].set(0.0)
+        p["wo"] = p["wo"].at[real:, :].set(0.0)
+    if hkv > cfg.num_kv_heads:
+        real = cfg.num_kv_heads * dh
+        p["wk"] = p["wk"].at[:, real:].set(0.0)
+        p["wv"] = p["wv"].at[:, real:].set(0.0)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _ssm_params(key, cfg: ArchConfig, d: int):
+    h, p_, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    din = h * p_
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 8)
+    return {
+        "in_x": dense_init(ks[0], (d, din)),
+        "in_z": dense_init(ks[1], (d, din)),
+        "in_b": dense_init(ks[2], (d, n)),
+        "in_c": dense_init(ks[3], (d, n)),
+        "in_dt": dense_init(ks[4], (d, h)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[5], (h,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(jax.random.uniform(ks[6], (h,), jnp.float32,
+                                            1.0, 16.0)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "conv_w": dense_init(ks[7], (cfg.ssm_conv_width, conv_ch),
+                             scale=cfg.ssm_conv_width ** -0.5),
+        "ssm_norm": jnp.ones((din,), jnp.float32),
+        "out": dense_init(ks[7], (din, d), scale=din ** -0.5),
+    }
+
+
+def _layer_params(key, cfg: ArchConfig, cross: bool = False):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: Params = {"ln1": jnp.ones((d,), jnp.float32)}
+    if cfg.has_attention:
+        p["attn"] = _attn_params(ks[0], cfg, d)
+    if cfg.has_ssm:
+        p["ssm"] = _ssm_params(ks[1], cfg, d)
+    if cross:
+        p["ln_cross"] = jnp.ones((d,), jnp.float32)
+        p["cross"] = _attn_params(ks[2], cfg, d)
+    if cfg.num_experts:
+        fe = cfg.moe_d_ff or cfg.d_ff
+        e = cfg.experts_eff
+        p["ln2"] = jnp.ones((d,), jnp.float32)
+        p["moe"] = {
+            "router": dense_init(ks[3], (d, e)),
+            "w_gate": dense_init(ks[4], (e, d, fe)),
+            "w_up": dense_init(ks[5], (e, d, fe)),
+            "w_down": dense_init(ks[6], (e, fe, d), scale=fe ** -0.5),
+        }
+        if e > cfg.num_experts:  # padded experts are never routed
+            for kk in ("w_gate", "w_up", "w_down"):
+                p["moe"][kk] = p["moe"][kk].at[cfg.num_experts:].set(0.0)
+            p["moe"]["router"] = \
+                p["moe"]["router"].at[:, cfg.num_experts:].set(0.0)
+        if cfg.num_shared_experts:
+            fs = cfg.num_shared_experts * fe
+            p["moe"]["shared_gate"] = dense_init(ks[7], (d, fs))
+            p["moe"]["shared_up"] = dense_init(ks[7], (d, fs))
+            p["moe"]["shared_down"] = dense_init(ks[7], (fs, d),
+                                                 scale=fs ** -0.5)
+    elif cfg.d_ff:
+        p["ln2"] = jnp.ones((d,), jnp.float32)
+        p["mlp"] = {
+            "wg": dense_init(ks[3], (d, cfg.d_ff)),
+            "wu": dense_init(ks[4], (d, cfg.d_ff)),
+            "wd": dense_init(ks[5], (cfg.d_ff, d), scale=cfg.d_ff ** -0.5),
+        }
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    kt, ke, kl, kenc, kh = jax.random.split(key, 5)
+
+    def stack(k, fn, n):
+        # n == 0 (cost-model variants): empty leading axis, scan runs 0 times
+        m = max(n, 1)
+        t = jax.tree.map(lambda *xs: jnp.stack(xs),
+                         *[fn(kk) for kk in jax.random.split(k, m)])
+        return t if n else jax.tree.map(lambda x: x[:0], t)
+    params: Params = {
+        "embed": embed_init(ke, (cfg.vocab_padded, cfg.d_model)),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": stack(kl, lambda k: _layer_params(
+            k, cfg, cross=cfg.is_encdec), cfg.num_layers),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab_padded))
+    if cfg.is_encdec:
+        enc_cfg = cfg  # same widths for whisper-base
+        params["enc_layers"] = stack(
+            kenc, lambda k: _layer_params(k, enc_cfg), cfg.encoder_layers)
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+def _sinusoid_pos(s: int, d: int, dtype):
+    """Whisper-style fixed sinusoidal positions (no table: any length)."""
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, d, 2, jnp.float32) / d * jnp.log(10000.0))
+    ang = pos * inv[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+
+def _cast_layers(layers: Params, cfg: ArchConfig) -> Params:
+    """cast_weights_once lever: convert >=2D f32 masters to the compute
+    dtype OUTSIDE the layer scan, so sharded weight gathers move bf16.
+    1D vectors (norms, biases, a_log, dt_bias) stay f32 for stability."""
+    if not cfg.cast_weights_once:
+        return layers
+    cdt = jnp.dtype(cfg.dtype)
+
+    def one(a):
+        if a.ndim >= 3 and a.dtype == jnp.float32:  # stacked (L, ...) mats
+            return a.astype(cdt)
+        return a
+    return jax.tree.map(one, layers)
+
+
+# --------------------------------------------------------------------------
+# layer forward pieces
+# --------------------------------------------------------------------------
+def _attention_block(h, lp, cfg: ArchConfig, positions, causal: bool,
+                     kv_override=None, use_pallas: bool = False):
+    """h: (B, S, D) normed input. kv_override: (k, v) for cross-attention."""
+    b, s, d = h.shape
+    dh = cfg.resolved_head_dim
+    hq, hkv = cfg.q_heads_eff, cfg.kv_heads_eff
+    cdt = h.dtype
+    q = _constrain_bshd((h @ lp["wq"].astype(cdt)).reshape(b, s, hq, dh),
+                        cfg)
+    if kv_override is None:
+        k = _constrain_bshd(
+            (h @ lp["wk"].astype(cdt)).reshape(b, s, hkv, dh), cfg)
+        v = _constrain_bshd(
+            (h @ lp["wv"].astype(cdt)).reshape(b, s, hkv, dh), cfg)
+    else:
+        k, v = kv_override
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"])
+        k = rms_norm(k, lp["k_norm"]) if kv_override is None else k
+    # RoPE applies to self-attention only (cross-attention queries attend to
+    # encoder states whose positions live in the encoder's learned table)
+    if kv_override is None and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal=causal)
+        o = o.transpose(0, 2, 1, 3)
+    elif s >= 2048:
+        o = attn_lib.chunked_attention(q, k, v, causal=causal)
+    else:
+        o = attn_lib.full_attention(q, k, v, causal=causal)
+    o = _constrain_bshd(o, cfg)
+    out = o.reshape(b, s, hq * dh) @ lp["wo"].astype(cdt)
+    return out, (k, v)
+
+
+def _ssm_block(h, lp, cfg: ArchConfig):
+    """h: (B, S, D) normed input -> (B, S, D); full-sequence (train/prefill)."""
+    b, s, d = h.shape
+    hh, pp, nn = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cdt = h.dtype
+    x = h @ lp["in_x"].astype(cdt)  # (B,S,H*P)
+    z = h @ lp["in_z"].astype(cdt)
+    bb = h @ lp["in_b"].astype(cdt)  # (B,S,N)
+    cc = h @ lp["in_c"].astype(cdt)
+    dt = jax.nn.softplus(
+        (h @ lp["in_dt"].astype(cdt)).astype(jnp.float32)
+        + lp["dt_bias"][None, None])  # (B,S,H) f32
+    conv_in = jnp.concatenate([x, bb, cc], axis=-1)
+    conv_out, _ = ssm_lib.causal_conv(conv_in, lp["conv_w"].astype(cdt))
+    conv_out = jax.nn.silu(conv_out)
+    x, bb, cc = jnp.split(conv_out, [hh * pp, hh * pp + nn], axis=-1)
+    xh = x.reshape(b, s, hh, pp)
+    y, state = ssm_lib.ssd_chunked(xh, lp["a_log"], bb, cc, dt,
+                                   chunk=min(cfg.ssm_chunk, s),
+                                   return_state=True)
+    y = y + xh * lp["d_skip"].astype(cdt)[None, None, :, None]
+    y = y.reshape(b, s, hh * pp)
+    y = rms_norm(y * jax.nn.silu(z), lp["ssm_norm"])
+    return y @ lp["out"].astype(cdt), state, conv_in
+
+
+def _ffn_block(x, lp, cfg: ArchConfig):
+    """Returns (out, aux). x is the normed input."""
+    cdt = x.dtype
+    if cfg.num_experts:
+        y, aux = moe_lib.moe_ffn(
+            x, jax.tree.map(lambda a: a.astype(cdt), lp["moe"]),
+            num_experts=cfg.experts_eff, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            num_real_experts=cfg.num_experts)
+        return y, aux
+    y = swiglu(x, lp["mlp"]["wg"].astype(cdt), lp["mlp"]["wu"].astype(cdt),
+               lp["mlp"]["wd"].astype(cdt))
+    return y, None
+
+
+def _decoder_block(x, lp, cfg: ArchConfig, positions, causal=True,
+                   cross_kv=None, use_pallas=False):
+    """Full-sequence decoder block. Returns (x, aux, kv, ssm_state, conv_tail)."""
+    h = rms_norm(x, lp["ln1"])
+    mix = 0.0
+    kv = None
+    ssm_state = None
+    conv_tail = None
+    if cfg.has_attention:
+        a, kv = _attention_block(h, lp["attn"], cfg, positions, causal,
+                                 use_pallas=use_pallas)
+        mix = mix + a
+    if cfg.has_ssm:
+        sout, ssm_state, conv_in = _ssm_block(h, lp["ssm"], cfg)
+        conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+        mix = mix + sout
+    if cfg.has_attention and cfg.has_ssm:
+        mix = mix * 0.5  # hymba: average the parallel heads
+    x = x + mix
+    if cross_kv is not None:
+        hc = rms_norm(x, lp["ln_cross"])
+        c, _ = _attention_block(hc, lp["cross"], cfg, positions, False,
+                                kv_override=cross_kv)
+        x = x + c
+    aux = None
+    if cfg.num_experts or cfg.d_ff:
+        y, aux = _ffn_block(rms_norm(x, lp["ln2"]), lp, cfg)
+        x = x + y
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill math)
+# --------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ArchConfig, batch) -> tuple[Any, Any]:
+    """Token + stub-modality embedding. batch keys: tokens (B, S_text);
+    optional patches (B, P, D) [vlm]; frames (B, S_enc, D) [audio]."""
+    cdt = jnp.dtype(cfg.dtype)
+    emb = params["embed"].astype(cdt)
+    x = emb[batch["tokens"]]
+    if cfg.num_patches and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(cdt), x], axis=1)
+    return x
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """Whisper encoder: frames (B, S_enc, D) stub embeddings -> (B, S_enc, D)."""
+    cdt = jnp.dtype(cfg.dtype)
+    s = frames.shape[1]
+    x = frames.astype(cdt) + _sinusoid_pos(s, cfg.d_model, cdt)[None]
+
+    def body(x, lp):
+        x, _ = _decoder_block(x, lp, cfg, positions=None, causal=False)
+        return x, None
+
+    x, _ = lax.scan(body, x, _cast_layers(params["enc_layers"], cfg))
+    return rms_norm(x, params["enc_ln_f"])
+
+
+def forward(params, cfg: ArchConfig, batch, use_pallas: bool = False,
+            remat: bool = True):
+    """Returns (logits (B, S_total, V), aux dict)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    cross_kv_all = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["frames"])
+
+    def body(carry, lp):
+        x = carry
+        cross_kv = None
+        if cfg.is_encdec:
+            dh = cfg.resolved_head_dim
+            be, se, _ = enc_out.shape
+            ck = (enc_out @ lp["cross"]["wk"].astype(x.dtype)).reshape(
+                be, se, cfg.kv_heads_eff, dh)
+            cv = (enc_out @ lp["cross"]["wv"].astype(x.dtype)).reshape(
+                be, se, cfg.kv_heads_eff, dh)
+            cross_kv = (ck, cv)
+        x, aux = _decoder_block(x, lp, cfg, positions, causal=True,
+                                cross_kv=cross_kv, use_pallas=use_pallas)
+        lb = (aux["lb_loss"] if aux else jnp.float32(0))
+        zl = (aux["z_loss"] if aux else jnp.float32(0))
+        load = (aux["expert_load"] if aux
+                else jnp.zeros((max(cfg.num_experts, 1),)))
+        return x, (lb, zl, load)
+
+    if not remat or cfg.remat_policy == "none":
+        block = body
+    elif cfg.remat_policy == "save_dots":
+        block = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif cfg.remat_policy == "save_all_dots":
+        # saves batched dots too (MoE expert einsums carry the E batch dim)
+        block = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    else:
+        block = jax.checkpoint(body)
+    x, (lbs, zls, loads) = lax.scan(block, x,
+                                    _cast_layers(params["layers"], cfg))
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x @ head
+    aux = {"lb_loss": lbs.mean(), "z_loss": zls.mean(),
+           "expert_load": loads.sum(0)}
+    return logits, aux
+
+
+# --------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               enc_seq: int = 0) -> Params:
+    cdt = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim
+    l = cfg.num_layers
+    cache: Params = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.has_attention:
+        cache["k"] = jnp.zeros((l, batch, max_seq, cfg.kv_heads_eff, dh),
+                               cdt)
+        cache["v"] = jnp.zeros((l, batch, max_seq, cfg.kv_heads_eff, dh),
+                               cdt)
+    if cfg.has_ssm:
+        cache["ssm_state"] = jnp.zeros(
+            (l, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32)
+        conv_ch = cfg.ssm_heads * cfg.ssm_head_dim + 2 * cfg.ssm_state
+        cache["conv"] = jnp.zeros(
+            (l, batch, cfg.ssm_conv_width - 1, conv_ch), cdt)
+    if cfg.is_encdec:
+        cache["cross_k"] = jnp.zeros(
+            (l, batch, enc_seq, cfg.kv_heads_eff, dh), cdt)
+        cache["cross_v"] = jnp.zeros(
+            (l, batch, enc_seq, cfg.kv_heads_eff, dh), cdt)
+    return cache
+
+
+def prefill(params, cfg: ArchConfig, batch, cache, use_pallas: bool = False):
+    """Full-sequence prefill that also fills the cache.
+    Returns (last-position logits (B, V), cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None]
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["frames"])
+
+    def body(x, lp_cache):
+        lp, lcache = lp_cache
+        cross_kv = None
+        new_lcache = dict(lcache)
+        if cfg.is_encdec:
+            dh = cfg.resolved_head_dim
+            be, se, _ = enc_out.shape
+            ck = (enc_out @ lp["cross"]["wk"].astype(x.dtype)).reshape(
+                be, se, cfg.kv_heads_eff, dh)
+            cv = (enc_out @ lp["cross"]["wv"].astype(x.dtype)).reshape(
+                be, se, cfg.kv_heads_eff, dh)
+            cross_kv = (ck, cv)
+            new_lcache["cross_k"], new_lcache["cross_v"] = ck, cv
+        h = rms_norm(x, lp["ln1"])
+        mix = 0.0
+        if cfg.has_attention:
+            a, (k, v) = _attention_block(h, lp["attn"], cfg, positions, True,
+                                         use_pallas=use_pallas)
+            kc, vc = attn_lib.update_cache(lcache["k"], lcache["v"], k, v, 0)
+            new_lcache["k"], new_lcache["v"] = kc, vc
+            mix = mix + a
+        if cfg.has_ssm:
+            sout, state, conv_in = _ssm_block(h, lp["ssm"], cfg)
+            new_lcache["ssm_state"] = state
+            new_lcache["conv"] = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+            mix = mix + sout
+        if cfg.has_attention and cfg.has_ssm:
+            mix = mix * 0.5
+        x = x + mix
+        if cross_kv is not None:
+            hc = rms_norm(x, lp["ln_cross"])
+            c, _ = _attention_block(hc, lp["cross"], cfg, positions, False,
+                                    kv_override=cross_kv)
+            x = x + c
+        if cfg.num_experts or cfg.d_ff:
+            y, _ = _ffn_block(rms_norm(x, lp["ln2"]), lp, cfg)
+            x = x + y
+        return x, new_lcache
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_layer_caches = lax.scan(
+        body, x, (_cast_layers(params["layers"], cfg), layer_caches))
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x[:, -1] @ head
+    new_cache = dict(new_layer_caches)
+    new_cache["pos"] = jnp.asarray(s, jnp.int32)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache):
+    """One decode step. tokens: (B, 1) int32. Returns (logits (B, V), cache)."""
+    cdt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(cdt)[tokens]  # (B, 1, D)
+    pos = cache["pos"]
+    positions = pos[None, None]  # (1,1)
+    dh = cfg.resolved_head_dim
+
+    def body(x, lp_cache):
+        lp, lcache = lp_cache
+        new_lcache = dict(lcache)
+        h = rms_norm(x, lp["ln1"])
+        b = h.shape[0]
+        mix = 0.0
+        if cfg.has_attention:
+            ap = lp["attn"]
+            q = (h @ ap["wq"].astype(cdt)).reshape(b, 1, cfg.q_heads_eff,
+                                                    dh)
+            k = (h @ ap["wk"].astype(cdt)).reshape(b, 1, cfg.kv_heads_eff,
+                                                    dh)
+            v = (h @ ap["wv"].astype(cdt)).reshape(b, 1, cfg.kv_heads_eff,
+                                                    dh)
+            if cfg.qk_norm:
+                q = rms_norm(q, ap["q_norm"])
+                k = rms_norm(k, ap["k_norm"])
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+            kc, vc = attn_lib.update_cache(lcache["k"], lcache["v"],
+                                           k, v, pos)
+            new_lcache["k"], new_lcache["v"] = kc, vc
+            o = attn_lib.decode_attention(q, kc, vc, pos)
+            mix = mix + o.reshape(b, 1, cfg.q_heads_eff * dh) @ \
+                ap["wo"].astype(cdt)
+        if cfg.has_ssm:
+            sp = lp["ssm"]
+            hh, pp, nn = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+            xs = h @ sp["in_x"].astype(cdt)
+            z = h @ sp["in_z"].astype(cdt)
+            bb = h @ sp["in_b"].astype(cdt)
+            cc = h @ sp["in_c"].astype(cdt)
+            dt = jax.nn.softplus(
+                (h @ sp["in_dt"].astype(cdt)).astype(jnp.float32)
+                + sp["dt_bias"][None, None])
+            conv_in = jnp.concatenate([xs, bb, cc], axis=-1)
+            conv_out, conv_cache = ssm_lib.causal_conv(
+                conv_in, sp["conv_w"].astype(cdt), cache=lcache["conv"])
+            new_lcache["conv"] = conv_cache
+            conv_out = jax.nn.silu(conv_out)
+            xs, bb, cc = jnp.split(conv_out, [hh * pp, hh * pp + nn], -1)
+            state, y = ssm_lib.ssd_decode_step(
+                lcache["ssm_state"], xs.reshape(b, hh, pp), sp["a_log"],
+                bb[:, 0], cc[:, 0], dt[:, 0])
+            new_lcache["ssm_state"] = state
+            y = y[:, None] + xs.reshape(b, 1, hh, pp) * \
+                sp["d_skip"].astype(cdt)[None, None, :, None]
+            y = rms_norm(y.reshape(b, 1, hh * pp) * jax.nn.silu(z),
+                         sp["ssm_norm"])
+            mix = mix + y @ sp["out"].astype(cdt)
+        if cfg.has_attention and cfg.has_ssm:
+            mix = mix * 0.5
+        x = x + mix
+        if cfg.is_encdec:
+            hc = rms_norm(x, lp["ln_cross"])
+            c, _ = _attention_block(
+                hc, lp["cross"], cfg, positions, False,
+                kv_override=(lcache["cross_k"], lcache["cross_v"]))
+            x = x + c
+        if cfg.num_experts or cfg.d_ff:
+            y, _ = _ffn_block(rms_norm(x, lp["ln2"]), lp, cfg)
+            x = x + y
+        return x, new_lcache
+
+    layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    x, new_layer_caches = lax.scan(
+        body, x, (_cast_layers(params["layers"], cfg), layer_caches))
+    x = rms_norm(x, params["ln_f"])
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = x[:, 0] @ head
+    new_cache = dict(new_layer_caches)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

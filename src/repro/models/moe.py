@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN: token-choice top-k, sort-based capacity dispatch.
+
+Design (DESIGN.md §5): each batch row is a dispatch group (groups shard over
+("pod","data")), experts shard over "model" (EP). Within a group the
+assignment is sorted by expert id, positions are computed with a cumsum, and
+tokens scatter into a dense (E, C, D) buffer — the expert matmuls are then
+plain einsums and GSPMD inserts exactly one all-to-all each way for the
+group->expert resharding. Capacity C = S*k/E * capacity_factor; overflow
+tokens drop (standard Switch semantics) but keep their shared-expert and
+residual paths.
+
+Includes the load-balance aux loss (Switch/DeepSeek form) and router z-loss.
+
+The *structure-aware expert schedule* (the paper's technique applied beyond
+paper, see DESIGN.md §4) lives in ``expert_activity`` / ``rebalance_plan``:
+expert load is power-law-skewed exactly like vertex degree, so hot experts
+are re-binned across EP shards by an AD-style activity estimate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _group_dispatch(x, gates, eidx, num_experts: int, capacity: int):
+    """x: (S, D); gates: (S, k); eidx: (S, k) -> (buf (E, C, D), meta)."""
+    s, d = x.shape
+    k = gates.shape[-1]
+    flat_e = eidx.reshape(-1)  # (S*k,)
+    order = jnp.argsort(flat_e)  # stable by expert id
+    e_sorted = flat_e[order]
+    tok_sorted = order // k
+    gate_sorted = gates.reshape(-1)[order]
+    counts = jnp.bincount(flat_e, length=num_experts)
+    seg_start = jnp.cumsum(counts) - counts
+    pos = jnp.arange(s * k) - seg_start[e_sorted]
+    # out-of-capacity assignments drop (scatter mode='drop')
+    buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+    buf = buf.at[e_sorted, pos].set(x[tok_sorted], mode="drop")
+    return buf, (e_sorted, pos, tok_sorted, gate_sorted)
+
+
+def _group_combine(out_buf, meta, s: int):
+    e_sorted, pos, tok_sorted, gate_sorted = meta
+    d = out_buf.shape[-1]
+    # gather expert outputs back (OOB positions -> 0 via fill)
+    vals = out_buf.at[e_sorted, pos].get(mode="fill", fill_value=0.0)
+    vals = vals * gate_sorted[:, None].astype(vals.dtype)
+    out = jnp.zeros((s, d), out_buf.dtype)
+    return out.at[tok_sorted].add(vals)
+
+
+def moe_ffn(x, params, *, num_experts: int, top_k: int,
+            capacity_factor: float = 1.25, norm_topk: bool = True,
+            num_real_experts: int | None = None):
+    """x: (B, S, D). params: router (D, E), w_gate/w_up (E, D, Fe),
+    w_down (E, Fe, D), optional shared_{gate,up,down}.
+    ``num_experts`` may exceed ``num_real_experts`` (structural padding for
+    EP divisibility): padded experts are masked out of routing entirely.
+    Returns (y, aux) with aux = {lb_loss, z_loss, expert_load (E,)}."""
+    b, s, d = x.shape
+    real = num_real_experts or num_experts
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    if real < num_experts:
+        pad_mask = jnp.arange(num_experts) >= real
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    gates, eidx = jax.lax.top_k(probs, top_k)  # (B, S, k)
+    if norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    capacity = max(int(s * top_k / real * capacity_factor), top_k)
+
+    def per_group(xg, gg, eg):
+        buf, meta = _group_dispatch(xg, gg, eg, num_experts, capacity)
+        h = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+        ob = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                        params["w_down"])
+        return _group_combine(ob, meta, s)
+
+    y = jax.vmap(per_group)(x, gates.astype(x.dtype), eidx)
+
+    if "shared_gate" in params:
+        h = jax.nn.silu(x @ params["shared_gate"]) * (x @ params["shared_up"])
+        y = y + h @ params["shared_down"]
+
+    # aux losses (computed in f32 on router stats)
+    me = jnp.mean(probs, axis=(0, 1))  # mean prob per expert
+    load1 = jnp.zeros(num_experts).at[eidx.reshape(-1)].add(1.0)
+    ce = load1 / jnp.maximum(load1.sum(), 1.0)  # fraction of assignments
+    lb_loss = num_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "expert_load": load1}
+    return y, aux
+
+
+# ---- structure-aware expert scheduling (paper technique, beyond-paper) ----
+def expert_activity(load_ema: np.ndarray, load_now: np.ndarray,
+                    alpha: float = 0.75, ema: float = 0.9) -> np.ndarray:
+    """AD-analogue for experts (Eq. 1/2 re-read): 'in-degree' = tokens routed
+    now, 'out-degree' = historical load; activity blends them just as
+    D(v) = D_o + alpha*D_i blends the two degree directions."""
+    new_ema = ema * load_ema + (1 - ema) * load_now
+    return new_ema + alpha * load_now, new_ema
+
+
+def rebalance_plan(activity: np.ndarray, num_shards: int) -> np.ndarray:
+    """Greedy hot/cold re-binning: order experts by activity (descending) and
+    deal them round-robin-by-load onto EP shards, so each shard's predicted
+    load is even — the paper's hot/cold partition balancing, with experts as
+    vertices. Returns perm such that expert i should live at slot perm[i]."""
+    e = activity.shape[0]
+    order = np.argsort(-activity)
+    shard_load = np.zeros(num_shards)
+    shard_fill = [[] for _ in range(num_shards)]
+    per_shard = e // num_shards
+    for idx in order:
+        k = int(np.argmin(np.where(
+            np.array([len(f) for f in shard_fill]) < per_shard,
+            shard_load, np.inf)))
+        shard_fill[k].append(idx)
+        shard_load[k] += activity[idx]
+    perm = np.empty(e, dtype=np.int64)
+    slot = 0
+    for f in shard_fill:
+        for idx in f:
+            perm[idx] = slot
+            slot += 1
+    return perm

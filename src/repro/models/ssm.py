@@ -1,0 +1,110 @@
+"""Mamba2 SSD (state-space duality) mixer: chunked prefill + O(1) decode.
+
+Chunked algorithm (SSD, arXiv:2405.21060 §6) in pure JAX:
+  * intra-chunk: quadratic attention-like term (Q x Q decay-masked Gram
+    matrix per head) — MXU-friendly;
+  * inter-chunk: per-chunk states carried by a short scan (nc steps).
+The naive per-step recurrence in kernels/ref.py::ssd_scan is the oracle;
+tests assert allclose across shapes/dtypes. Decode carries (state, conv
+window) — no KV cache, which is what makes long_500k tractable (DESIGN.md).
+
+Layout: x (B, S, H, P); B/C projections are shared across heads (1 group);
+A is per-head scalar decay, dt per-head per-step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_chunked(x, a_log, b, c, dt, chunk: int = 128,
+                return_state: bool = False):
+    """x: (B,S,H,P), a_log: (H,), b/c: (B,S,N), dt: (B,S,H) -> y (B,S,H,P).
+
+    Exactly equal (up to fp error) to the sequential recurrence:
+        state_t = exp(dt_t * A) * state_{t-1} + (x_t * dt_t) (x) b_t
+        y_t     = <state_t, c_t>
+
+    return_state=True additionally returns the final state (B,H,P,N) —
+    used by prefill to seed the decode recurrence.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))  # (H,) negative decay rates
+
+    xs = x.reshape(bsz, nc, q, h, p).astype(f32)
+    bs = b.reshape(bsz, nc, q, n).astype(f32)
+    cs = c.reshape(bsz, nc, q, n).astype(f32)
+    dts = dt.reshape(bsz, nc, q, h).astype(f32)
+
+    da = dts * a  # (B,nc,Q,H) log-decay per step
+    l = jnp.cumsum(da, axis=2)  # inclusive within-chunk cumulative log-decay
+    u = xs * dts[..., None]  # effective inputs (B,nc,Q,H,P)
+
+    # --- intra-chunk (causal quadratic term) ---
+    gram = jnp.einsum("bcqn,bcsn->bcqs", cs, bs)  # (B,nc,Q,Q)
+    # decay from step s (exclusive) to step q (inclusive), per head
+    ldiff = l[:, :, :, None, :] - l[:, :, None, :, :]  # (B,nc,Q,S,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(ldiff), 0.0)
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", gram, decay, u)
+
+    # --- chunk states: contribution of each chunk to its final state ---
+    l_last = l[:, :, -1:, :]  # (B,nc,1,H)
+    state_decay = jnp.exp(l_last - l)  # decay from step s to chunk end
+    chunk_states = jnp.einsum("bcqhp,bcqn,bcqh->bchpn", u, bs, state_decay)
+
+    # --- inter-chunk recurrence over nc (sequential, nc is small) ---
+    chunk_total = jnp.exp(l_last[:, :, 0, :])  # (B,nc,H) whole-chunk decay
+
+    def step(carry, inp):
+        s_c, d_c = inp  # (B,H,P,N), (B,H)
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry  # emit the PREVIOUS state (pre-chunk carry)
+
+    init = jnp.zeros((bsz, h, p, n), f32)
+    final_state, prev_states = lax.scan(
+        step, init, (jnp.moveaxis(chunk_states, 1, 0),
+                     jnp.moveaxis(chunk_total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cs, prev_states,
+                         jnp.exp(l))
+    y = (y_intra + y_inter).reshape(bsz, s, h, p).astype(x.dtype)
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_decode_step(state, x_t, a_log, b_t, c_t, dt_t):
+    """One-token recurrence. state: (B,H,P,N); x_t: (B,H,P); b_t/c_t: (B,N);
+    dt_t: (B,H). Returns (new_state, y_t (B,H,P))."""
+    f32 = jnp.float32
+    a = -jnp.exp(a_log.astype(f32))
+    decay = jnp.exp(dt_t.astype(f32) * a[None])  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x_t.astype(f32) * dt_t[..., None]
+                     .astype(f32), b_t.astype(f32))
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_t.astype(f32))
+    return state, y.astype(x_t.dtype)
+
+
+def causal_conv(x, w, cache=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). With a cache
+    ((B, K-1, C)) performs streaming decode and returns the new cache."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None]
+              for i in range(k))
+    new_cache = xp[:, -(k - 1):, :] if k > 1 else pad
+    return out.astype(x.dtype), new_cache

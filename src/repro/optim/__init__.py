@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW + cosine schedule, global-norm clipping,
+optional int8 error-feedback gradient compression for the slow (DCN/pod)
+axis. Functional, pytree-generic, no external deps."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_lr)
+from repro.optim.compression import (ef_compress_psum, int8_decode,
+                                     int8_encode)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "int8_encode", "int8_decode", "ef_compress_psum"]

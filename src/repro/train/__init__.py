@@ -1,0 +1,3 @@
+from repro.train.step import TrainState, loss_fn, make_train_step
+
+__all__ = ["TrainState", "loss_fn", "make_train_step"]

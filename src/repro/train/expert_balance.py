@@ -1,0 +1,96 @@
+"""Structure-aware expert rebalancing at runtime (the paper's technique,
+applied beyond paper — DESIGN.md §4).
+
+Mapping: experts are vertices; tokens routed to an expert are its in-edges;
+EP shards are the partitions. The paper's moves become:
+
+  * activity degree  -> EMA routed-token count blended with instantaneous
+                        load (Eq. 1's D_o + alpha*D_i re-read);
+  * dynamic repartitioning on a growing cadence (I1) -> periodic greedy
+    re-binning of experts onto EP shards by activity (rebalance_plan);
+  * O(n) bookkeeping -> permuting the expert axis of the MoE params (and
+    optimizer moments) together with the router columns, which is
+    FUNCTION-PRESERVING (the model computes exactly the same outputs; only
+    the shard each expert lives on changes — tested).
+
+The payoff at scale: the EP all-to-all's critical path is bounded by the
+hottest shard's token count; balanced shards cut straggling exactly as the
+paper's hot/cold balancing cuts cache thrash.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.models import moe as moe_lib
+
+
+def permute_expert_axis(params: dict, perm: np.ndarray) -> dict:
+    """Relabel experts: slot perm[i] <- expert i, for every (L, E, ...) MoE
+    tensor and the router's output columns. Function-preserving."""
+    inv = np.argsort(perm)  # new slot j holds old expert inv[j]
+
+    def one_layer_tree(moe):
+        out = dict(moe)
+        for k in ("w_gate", "w_up", "w_down"):
+            out[k] = moe[k][:, inv]  # (L, E, ...) expert axis
+        out["router"] = moe["router"][:, :, inv]  # (L, D, E) output cols
+        return out
+
+    new = dict(params)
+    new_layers = dict(params["layers"])
+    new_layers["moe"] = one_layer_tree(params["layers"]["moe"])
+    new["layers"] = new_layers
+    return new
+
+
+@dataclasses.dataclass
+class ExpertRebalancer:
+    """Paper Alg. 2's cadence, for experts: observe loads, re-bin on a
+    growing interval when the predicted imbalance justifies the move."""
+
+    num_experts: int
+    num_shards: int
+    alpha: float = 0.75  # Eq. 1 blend
+    ema: float = 0.9
+    interval: int = 50  # I1: steps between rebalance checks
+    growth: float = 1.5  # the paper's growing cadence
+    min_gain: float = 0.05  # skip moves worth <5% imbalance reduction
+    load_ema: np.ndarray | None = None
+    next_at: int = 0
+    moves: int = 0
+
+    def __post_init__(self):
+        if self.load_ema is None:
+            self.load_ema = np.zeros(self.num_experts)
+        self.next_at = self.interval
+
+    def shard_imbalance(self, activity: np.ndarray) -> float:
+        """max-shard / mean-shard predicted load under current placement."""
+        per = self.num_experts // self.num_shards
+        loads = activity.reshape(self.num_shards, per).sum(1)
+        return float(loads.max() / max(loads.mean(), 1e-9))
+
+    def observe(self, expert_load: np.ndarray, step: int):
+        """Feed this step's (E,) routed-token counts. Returns a permutation
+        (slot perm[i] <- expert i) when a rebalance should happen, else
+        None. Caller applies it with permute_expert_axis to params AND
+        optimizer moments, then resets its jitted step (shapes unchanged,
+        so no recompile is actually triggered)."""
+        activity, self.load_ema = moe_lib.expert_activity(
+            self.load_ema, np.asarray(expert_load, np.float64),
+            alpha=self.alpha, ema=self.ema)
+        if step < self.next_at:
+            return None
+        self.interval = max(int(np.ceil(self.interval * self.growth)),
+                            self.interval + 1)
+        self.next_at = step + self.interval
+        before = self.shard_imbalance(activity)
+        perm = moe_lib.rebalance_plan(activity, self.num_shards)
+        after = self.shard_imbalance(activity[np.argsort(perm)])
+        if before - after < self.min_gain * before:
+            return None
+        self.moves += 1
+        return perm

@@ -1,0 +1,84 @@
+"""Training step: CE loss (+ MoE aux, z-loss), grad, AdamW update.
+
+``make_train_step`` returns a pure function (state, batch) -> (state,
+metrics) suitable for jax.jit with in/out shardings from launch/sharding.py.
+Microbatching (gradient accumulation) happens inside the step via lax.scan
+so the optimizer sees the full global batch while activation memory is
+bounded by the microbatch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+TrainState = dict  # {"params", "opt", "step"}
+
+
+def init_state(cfg: ArchConfig, key, opt_cfg: AdamWConfig) -> TrainState:
+    params = model_lib.init_params(cfg, key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def loss_fn(params, cfg: ArchConfig, batch, use_pallas: bool = False):
+    logits, aux = model_lib.forward(params, cfg, batch,
+                                    use_pallas=use_pallas)
+    # VLM: patch positions carry no next-token target — score text tail only
+    v = logits.shape[-1]
+    targets = batch["targets"]
+    t = targets.shape[1]
+    logits = logits[:, -t:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = nll.mean()
+    total = ce
+    if cfg.num_experts:
+        total = total + 1e-2 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+    return total, {"ce": ce, **{k: v for k, v in aux.items()
+                                if k != "expert_load"},
+                   "expert_load": aux["expert_load"]}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1, use_pallas: bool = False):
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, use_pallas=use_pallas),
+        has_aux=True)
+
+    def step(state: TrainState, batch: dict[str, Any]):
+        params = state["params"]
+        if num_microbatches > 1:
+            def micro(carry, mb):
+                (loss, aux), g = grad_fn(params, batch=mb)
+                acc = jax.tree.map(jnp.add, carry[0], g)
+                return (acc, carry[1] + loss), aux
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((num_microbatches,
+                                     x.shape[0] // num_microbatches)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, lsum), auxs = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+            loss = lsum / num_microbatches
+            aux = jax.tree.map(lambda x: x.mean(0) if x.ndim else x, auxs)
+        else:
+            (loss, aux), grads = grad_fn(params, batch=batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg)
+        metrics = {"loss": loss, **opt_metrics,
+                   "ce": aux["ce"]}
+        if cfg.num_experts:
+            # summed routed-token counts per expert (drives the
+            # structure-aware rebalancer, train/expert_balance.py)
+            metrics["expert_load"] = aux["expert_load"]
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step

@@ -1,0 +1,74 @@
+"""Unit + property tests: degrees (Eq. 1/2), partitioning (Alg. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import degrees, graph as G
+from repro.core.partition import build_plan
+
+
+def test_degree_function_eq1():
+    # 0 -> 1, 0 -> 2, 1 -> 2 : out = [2,1,0], in = [0,1,2]
+    g = G.from_edges(3, [0, 0, 1], [1, 2, 2])
+    d = degrees.degree_function(g, alpha=0.5)
+    assert np.allclose(d, [2 + 0.0, 1 + 0.5, 0 + 1.0])
+
+
+def test_degree_function_alpha_bounds():
+    g = G.from_edges(2, [0], [1])
+    with pytest.raises(ValueError):
+        degrees.degree_function(g, alpha=0.0)
+
+
+def test_active_degree_eq2_hand():
+    # two vertices, one edge 0 -> 1, alpha = 1: D = [1, 1], Dmax = 1
+    # AD(v) = D(v) + sum_nbr D / (sqrt(Dmax) * D(v)) = 1 + 1/1 = 2
+    g = G.from_edges(2, [0], [1])
+    ad = degrees.active_degree(g, alpha=1.0)
+    assert np.allclose(ad, [2.0, 2.0])
+
+
+def test_dead_vertices_have_zero_ad():
+    g = G.from_edges(4, [0, 1], [1, 0])  # 2 and 3 are isolated
+    ad = degrees.active_degree(g)
+    assert ad[2] == 0.0 and ad[3] == 0.0 and ad[0] > 0
+
+
+def test_suggest_alpha_regimes():
+    road = G.uniform_graph(2000, deg=4, seed=0)
+    social = G.powerlaw_graph(2000, avg_deg=8, seed=0)
+    a_road = degrees.suggest_alpha(road)
+    a_social = degrees.suggest_alpha(social)
+    assert 0.5 < a_road < a_social < 1.0  # paper: road->0.5, weibo->1
+
+
+@given(n=st.integers(50, 400), avg=st.integers(2, 8),
+       seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_partition_plan_invariants(n, avg, seed):
+    g = G.powerlaw_graph(n, avg_deg=avg, seed=seed)
+    plan = build_plan(g, block_size=64)
+    # every vertex appears exactly once in the permutation
+    assert np.array_equal(np.sort(plan.order), np.arange(n))
+    # AD is non-increasing over the live prefix
+    live_ad = plan.ad[:plan.n_live]
+    assert np.all(np.diff(live_ad) <= 1e-9)
+    # dead tail has zero AD
+    assert np.all(plan.ad[plan.n_live:] == 0)
+    # hot storage rows are the blocks before the barrier
+    assert np.array_equal(plan.hot.block_ids,
+                          np.arange(plan.barrier_block))
+    # padded edge storage is lane-aligned and mask-consistent
+    for store in (plan.hot, plan.cold):
+        if store.num_blocks:
+            assert store.capacity % 128 == 0
+            assert np.array_equal(store.valid.sum(1), store.edges)
+    # block edge slices cover ALL in-edges of live vertices exactly once
+    total = int(plan.hot.edges.sum() + plan.cold.edges.sum())
+    assert total == plan.graph.m
+
+
+def test_block_bytes_positive(core_periphery_small):
+    plan = build_plan(core_periphery_small, block_size=256)
+    for b in range(plan.num_blocks):
+        assert plan.block_bytes(b) > 0

@@ -1,0 +1,144 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.ssm import causal_conv, ssd_chunked, ssd_decode_step
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("e,c", [(1, 128), (100, 256), (513, 512),
+                                 (2048, 128), (5000, 1024)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_spmv_sweep(e, c, dtype):
+    msg = jnp.asarray(RNG.normal(size=e).astype(dtype))
+    dst = jnp.asarray(RNG.integers(0, c, size=e).astype(np.int32))
+    got = ops.edge_block_sum(msg, dst, c)
+    want = ref.edge_block_sum(msg, dst, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(e=st.integers(1, 3000), c=st.sampled_from([128, 256, 512]),
+       seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_spmv_property(e, c, seed):
+    rng = np.random.default_rng(seed)
+    msg = jnp.asarray(rng.normal(size=e).astype(np.float32))
+    dst = jnp.asarray(rng.integers(0, c, size=e).astype(np.int32))
+    got = ops.edge_block_sum(msg, dst, c)
+    want = ref.edge_block_sum(msg, dst, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,hq,hkv,s,d", [
+    (1, 4, 2, 256, 64), (2, 8, 4, 128, 128), (1, 2, 1, 512, 64),
+    (1, 8, 8, 128, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, s, d, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), dtype=dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype=dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), dtype=dtype)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.attention(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_chunked_attention_matches_full():
+    from repro.models.attention import chunked_attention, full_attention
+    q = jnp.asarray(RNG.normal(size=(2, 2048, 4, 32)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 2048, 2, 32)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 2048, 2, 32)).astype(np.float32))
+    got = chunked_attention(q, k, v, causal=True)
+    want = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bsz,s,h,p,n,chunk", [
+    (2, 256, 4, 16, 32, 64), (1, 128, 2, 8, 16, 128),
+    (2, 512, 3, 32, 64, 128),
+])
+def test_ssd_chunked_vs_scan_oracle(bsz, s, h, p, n, chunk):
+    x = jnp.asarray(RNG.normal(size=(bsz, s, h, p)).astype(np.float32))
+    a_log = jnp.asarray(RNG.uniform(0, 2, size=(h,)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(bsz, s, n)).astype(np.float32))
+    c = jnp.asarray(RNG.normal(size=(bsz, s, n)).astype(np.float32))
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (bsz, s, h)).astype(np.float32))
+    got = ssd_chunked(x, a_log, b, c, dt, chunk=chunk)
+    want = ref.ssd_scan(x, a_log, b, c, dt)
+    scale = float(jnp.abs(want).max())
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+def test_ssd_decode_continues_prefill():
+    bsz, s, h, p, n = 1, 64, 2, 8, 16
+    x = jnp.asarray(RNG.normal(size=(bsz, s, h, p)).astype(np.float32))
+    a_log = jnp.asarray(RNG.uniform(0, 2, size=(h,)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(bsz, s, n)).astype(np.float32))
+    c = jnp.asarray(RNG.normal(size=(bsz, s, n)).astype(np.float32))
+    dt = jnp.asarray(RNG.uniform(1e-3, 0.1, (bsz, s, h)).astype(np.float32))
+    y_pre, state = ssd_chunked(x[:, :32], a_log, b[:, :32], c[:, :32],
+                               dt[:, :32], chunk=32, return_state=True)
+    ys = []
+    for t in range(32, s):
+        state, y = ssd_decode_step(state, x[:, t], a_log, b[:, t], c[:, t],
+                                   dt[:, t])
+        ys.append(y)
+    y_dec = jnp.stack(ys, 1)
+    y_full = ssd_chunked(x, a_log, b, c, dt, chunk=32)
+    np.testing.assert_allclose(y_dec, y_full[:, 32:], rtol=1e-4, atol=1e-4)
+
+
+def test_causal_conv_streaming():
+    x = jnp.asarray(RNG.normal(size=(2, 16, 6)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(4, 6)).astype(np.float32))
+    full, _ = causal_conv(x, w)
+    cache = jnp.zeros((2, 3, 6))
+    outs = []
+    for t in range(16):
+        o, cache = causal_conv(x[:, t:t + 1], w, cache)
+        outs.append(o)
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), full,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_engine_with_pallas_spmv_matches():
+    """The engine's sum-combine path through the Pallas kernel (interpret)
+    reaches the same fixpoint."""
+    from repro.core import algorithms as A, graph as G
+    from repro.core.engine import EngineConfig, StructureAwareEngine
+    g = G.powerlaw_graph(600, 4, seed=7)
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128)
+    plain = StructureAwareEngine(g, A.pagerank(), cfg).run()
+    pallas = StructureAwareEngine(
+        g, A.pagerank(),
+        EngineConfig(t2=1e-9, width=4, block_size=128, use_pallas=True)
+    ).run()
+    np.testing.assert_allclose(plain.values, pallas.values,
+                               rtol=1e-5, atol=1e-8)
+
+
+@pytest.mark.parametrize("g,q,n,p", [(4, 64, 32, 16), (2, 128, 128, 64),
+                                     (6, 128, 64, 128)])
+def test_ssd_intra_chunk_kernel(g, q, n, p):
+    """Pallas SSD intra-chunk kernel vs the einsum oracle."""
+    c = jnp.asarray(RNG.normal(size=(g, q, n)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(g, q, n)).astype(np.float32))
+    u = jnp.asarray(RNG.normal(size=(g, q, p)).astype(np.float32))
+    l = jnp.asarray(np.cumsum(
+        RNG.uniform(-0.1, 0, size=(g, q)).astype(np.float32), axis=1))
+    got = ops.ssd_intra_chunk(c, b, u, l)
+    gram = jnp.einsum("gqn,gsn->gqs", c, b)
+    ldiff = l[:, :, None] - l[:, None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(mask[None], jnp.exp(ldiff), 0.0)
+    want = jnp.einsum("gqs,gsp->gqp", gram * decay, u)
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-4 * float(jnp.abs(want).max()))
