@@ -33,7 +33,9 @@ def run(n: int = 20000, outdir: str = "results/convergence"):
     rows = []
     for aname, mk in [("pagerank", A.pagerank), ("sssp", lambda: A.sssp(0))]:
         base = BaselineEngine(g, mk(), cfg, frontier=False).run()
-        sa = StructureAwareEngine(g, mk(), cfg).run()
+        # host-driven loop: this suite plots PER-ITERATION trajectories,
+        # which the fused loop's boundary-granular history cannot provide
+        sa = StructureAwareEngine(g, mk(), cfg).run(fused=False)
         curves = {
             "base_psd": _curve(base.history, "psd_sum"),
             "base_active": _curve(base.history, "active"),

@@ -52,6 +52,25 @@ def run(n: int = 20000):
                 f"agree={agree};upd_gain={mb.updates/max(ms.updates,1):.2f}x;"
                 f"load_gain={mb.block_loads/max(ms.block_loads,1):.2f}x;"
                 f"io_gain={mb.bytes_loaded/max(ms.bytes_loaded,1):.2f}x"))
+        # fused vs host-driven loop (device-resident superstep tentpole):
+        # steady-state us/iteration with the per-iteration host round-trip
+        # eliminated. Both paths are warmed first so compile time does not
+        # pollute the ratio; the host loop is iteration-capped because a
+        # full host-driven convergence run IS the slow thing being removed.
+        eng = StructureAwareEngine(g, A.pagerank(), cfg)
+        eng.run(max_iterations=2)                # compile the fused chunk
+        eng.run(max_iterations=2, fused=False)   # compile the host-loop fns
+        fast = eng.run(max_iterations=32)
+        slow = eng.run(max_iterations=8, fused=False)
+        us_f = fast.metrics.wall_time_s * 1e6 / max(fast.metrics.iterations,
+                                                    1)
+        us_h = slow.metrics.wall_time_s * 1e6 / max(slow.metrics.iterations,
+                                                    1)
+        rows.append((f"runtime/{gname}/pagerank/sa_fused_loop", us_f,
+                     f"iters={fast.metrics.iterations};"
+                     f"speedup_vs_hostloop={us_h / max(us_f, 1e-9):.2f}x"))
+        rows.append((f"runtime/{gname}/pagerank/sa_host_loop", us_h,
+                     f"iters={slow.metrics.iterations};capped=True"))
         # BC (sampled sources)
         bc_b, m_b = betweenness(g, [0, 1], cfg, structure_aware=False)
         bc_s, m_s = betweenness(g, [0, 1], cfg, structure_aware=True)

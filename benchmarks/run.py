@@ -1,7 +1,10 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV;
+# ``--json`` additionally writes BENCH_runtime.json so PRs can track the
+# perf trajectory.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -11,6 +14,9 @@ def main() -> None:
                     help="graph size for the engine benchmarks")
     ap.add_argument("--only", default=None,
                     help="comma list: runtime,convergence,io,kernels")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_runtime.json (suite, name, "
+                         "us_per_call) next to the CSV output")
     args = ap.parse_args()
 
     from benchmarks import (bench_convergence, bench_io, bench_kernels,
@@ -24,14 +30,29 @@ def main() -> None:
     pick = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     ok = True
+    records = []
     for key in pick:
         try:
-            for name, us, derived in suites[key]():
-                print(f"{name},{us:.1f},{derived}")
-                sys.stdout.flush()
+            rows = suites[key]()
+        except ImportError:
+            # a suite that cannot even import is a broken harness, not a
+            # data point — fail loudly instead of emitting an ERROR row
+            raise
         except Exception as e:  # noqa: BLE001
             ok = False
             print(f"{key},-1,ERROR:{e!r}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+            records.append({"suite": key, "name": name,
+                            "us_per_call": round(float(us), 1),
+                            "derived": derived})
+    if args.json:
+        with open("BENCH_runtime.json", "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote BENCH_runtime.json ({len(records)} rows)",
+              file=sys.stderr)
     if not ok:
         sys.exit(1)
 

@@ -21,10 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.algorithms import VertexProgram
-from repro.core.engine import EngineConfig, RunResult
+from repro.core.engine import EngineConfig, RunResult, make_tiled_processor
 from repro.core.graph import Graph, symmetrize
 from repro.core.metrics import Metrics, Timer
-from repro.core.partition import build_plan
+from repro.core.partition import build_tiled_storage
 
 
 class BaselineEngine:
@@ -37,15 +37,19 @@ class BaselineEngine:
         self.graph = g
         # Identical chunking (without the AD sort) => identical block
         # accounting units. Blocks here are plain id-order chunks, which is
-        # what a static chunk-partitioned system uses.
+        # what a static chunk-partitioned system uses. The full sweep runs
+        # through the same tiled block processor as the structure-aware
+        # engine, so the benchmark comparison isolates scheduling, not
+        # implementation differences.
         self.num_blocks = max(-(-g.n // config.block_size), 1)
+        self.store = build_tiled_storage(g, config.block_size,
+                                         self.num_blocks)
         vals0, aux0 = program.init(g)
-        self.values0 = vals0
+        self._values_len = self.num_blocks * config.block_size
+        pad = self._values_len - g.n
+        self.values0 = (np.concatenate(
+            [vals0, np.zeros(pad, dtype=vals0.dtype)]) if pad else vals0)
         self.aux = jnp.asarray(aux0)
-        self.src = jnp.asarray(g.in_src)
-        self.dst = jnp.asarray(
-            np.repeat(np.arange(g.n, dtype=np.int64), g.in_deg))
-        self.w = jnp.asarray(g.in_w)
         self.out_deg_np = g.out_deg
         self._step = jax.jit(self._make_step())
 
@@ -53,21 +57,19 @@ class BaselineEngine:
         program, g = self.program, self.graph
         c = self.config.block_size
         nb = self.num_blocks
+        process_one, _, _ = make_tiled_processor(
+            program, self.store, self.aux, c, g.n, g.n,
+            self.config.use_pallas)
+        rows = jnp.arange(nb, dtype=jnp.int32)
 
         def step(values):
-            msg = program.edge_map(values[self.src], self.aux[self.src],
-                                   self.w)
-            if program.combine == "sum":
-                agg = jnp.zeros(g.n, jnp.float32).at[self.dst].add(msg)
-            elif program.combine == "min":
-                agg = jnp.full(g.n, program.identity).at[self.dst].min(msg)
-            else:
-                agg = jnp.full(g.n, program.identity).at[self.dst].max(msg)
-            new = program.apply(values, agg, g.n)
+            # lax.map, not vmap: batched tile loops run in lockstep until
+            # the LAST lane finishes, so vmap would make every block pay the
+            # largest block's tile count; mapped blocks pay their own.
+            _, news, psd, _ = jax.lax.map(
+                lambda r: process_one(values, r), rows)
+            new = news.reshape(nb * c)
             delta = program.sd_delta(values, new)
-            pad = (-g.n) % c
-            dpad = jnp.pad(delta, (0, pad)).reshape(nb, c)
-            psd = dpad.sum(axis=1) / c
             changed = (delta > 0)
             return new, psd, changed.sum()
         return step
@@ -110,8 +112,8 @@ class BaselineEngine:
                     frontier_mask = delta_v
         metrics.iterations = it
         metrics.wall_time_s = t.elapsed
-        return RunResult(values=np.asarray(values), metrics=metrics,
-                         history=history)
+        return RunResult(values=np.asarray(values)[:self.graph.n],
+                         metrics=metrics, history=history)
 
     def _bytes_per_block(self) -> np.ndarray:
         """Edges per id-order block via indptr differences; same 12B/edge +

@@ -57,9 +57,22 @@ class DistributedEngine(StructureAwareEngine):
         self.axis = axis
         self.ndev = self.mesh.shape[axis]
         bpd = blocks_per_device or max(1, config.width // self.ndev)
-        config = dataclasses.replace(config, width=self.ndev * bpd)
+        # shard_map dispatch is host-driven (fused=False): the mesh routing
+        # happens per call, not inside a device-resident while_loop.
+        config = dataclasses.replace(config, width=self.ndev * bpd,
+                                     fused=False)
         self.bpd = bpd
         super().__init__(graph, program, config)
+
+    def run(self, max_iterations: int | None = None,
+            fused: bool | None = None):
+        """shard_map dispatch is host-driven; the single-device fused chunk
+        would silently ignore the mesh, so asking for it is an error."""
+        if fused:
+            raise ValueError(
+                "DistributedEngine does not support the fused loop: "
+                "dispatch is routed through shard_map per host call")
+        return super().run(max_iterations, fused=False)
 
     def _get_fn(self, store_key: str, sequential: bool):
         key = (store_key, sequential, "dist")

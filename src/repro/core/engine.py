@@ -13,6 +13,23 @@ The engine executes one vertex program over a :class:`PartitionPlan`:
   * convergence is SUM_j PSD(j) < T2 (§4), with unvisited blocks carrying an
     UNSEEN sentinel so the whole graph is covered at least once.
 
+Superstep fusion (default execution mode). One iteration =
+schedule -> hot dispatch -> cold dispatch -> staleness post -> convergence
+test, and the whole sequence is traced into a single jitted
+``lax.while_loop`` over the unified tiled storage (``PartitionPlan.unified``
+— any block id, no host-side hot/cold routing). The host is consulted only
+at **repartition boundaries** (every ``repartition_interval`` iterations,
+growing by ``repartition_growth``): one device->host sync per boundary pulls
+the PSD vector, flushes the device-resident metric counters, snapshots
+history, and re-labels blocks (Alg. 2 stays host-side — it is O(P) numpy
+bookkeeping on a cadence, not per-iteration work). Host transfers per run
+are therefore O(iterations / repartition_interval), not O(iterations); the
+per-iteration ``np.asarray(psd)`` round-trip of the host-driven loop
+dominated wall time for exactly the many-small-iteration workloads the
+paper targets. The reference host-driven loop is kept as
+``run(fused=False)`` (per-iteration history, and the base for the
+shard_map distributed engine).
+
 Correctness beyond the paper's prose: partial scheduling needs a staleness
 signal — when block j's vertices change, downstream blocks (containing j's
 out-neighbours) must become schedulable again even if their own PSD already
@@ -20,7 +37,7 @@ decayed to 0 (the paper's 'cold partitions can re-heat'). We precompute the
 block->affected-blocks adjacency once (host, O(m)) and bump downstream PSDs
 after each iteration. Without this, min/max programs can terminate with
 stale values; with it, every engine run reaches the same fixpoint as the
-synchronous baseline (tested property).
+synchronous baseline (tested property), fused or host-driven.
 """
 from __future__ import annotations
 
@@ -37,9 +54,10 @@ from repro.core import state as state_lib
 from repro.core.algorithms import VertexProgram
 from repro.core.graph import Graph, symmetrize
 from repro.core.metrics import Metrics, Timer
-from repro.core.partition import EdgeStorage, PartitionPlan, build_plan
+from repro.core.partition import (EdgeStorage, PartitionPlan, TiledStorage,
+                                  build_plan)
 from repro.core.repartition import RepartitionState
-from repro.core.schedule import Scheduler, Selection
+from repro.core.schedule import Scheduler, Selection, make_device_select
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +76,7 @@ class EngineConfig:
     max_iterations: int = 100000
     stale_eps: float = 1e-12  # PSD above this marks downstream blocks dirty
     use_pallas: bool = False  # sum-combine via the Pallas spmv kernel
+    fused: bool = True  # device-resident lax.while_loop superstep
     seed: int = 0
 
 
@@ -116,6 +135,75 @@ def make_block_processor(program: VertexProgram, store: EdgeStorage, aux,
         t_inner hops (the paper's per-vertex async propagation, at block
         granularity). Writes only within the block's own range."""
         base = gids[row] * c
+        old = lax.dynamic_slice(values, (base,), (c,))
+
+        def inner(_, vals):
+            _, new, _, _ = process_one(vals, row)
+            return lax.dynamic_update_slice(vals, new, (base,))
+
+        vals2 = lax.fori_loop(0, t_inner, inner, values)
+        newb = lax.dynamic_slice(vals2, (base,), (c,))
+        vmask = (base + jnp.arange(c)) < n_live
+        delta = jnp.where(vmask, program.sd_delta(old, newb), 0.0)
+        cnt = jnp.maximum(vmask.sum(), 1)
+        return base, newb, delta.sum() / cnt, delta.max()
+
+    return process_one, process_iterated, gids
+
+
+def make_tiled_processor(program: VertexProgram, store: TiledStorage, aux,
+                         block_size: int, n_live: int, n_total: int,
+                         use_pallas: bool):
+    """Block processor over the unified tiled layout: same
+    (process_one, process_iterated, gids) contract as
+    :func:`make_block_processor`, but ``row`` is the GLOBAL block id and the
+    per-block work is a fori over that block's tile rows, so compute scales
+    with the block's true edge count rather than a shared padded capacity.
+    """
+    src = jnp.asarray(store.src)
+    dstl = jnp.asarray(store.dst_local)
+    ew = jnp.asarray(store.w)
+    evalid = jnp.asarray(store.valid)
+    tile_start = jnp.asarray(store.tile_start, dtype=jnp.int32)
+    tile_cnt = jnp.asarray(store.tile_cnt, dtype=jnp.int32)
+    gids = jnp.arange(store.num_blocks, dtype=jnp.int32)
+    c = block_size
+
+    if program.combine == "sum":
+        agg0 = jnp.zeros(c, jnp.float32)
+        merge = jnp.add
+    elif program.combine == "min":
+        agg0 = jnp.full(c, program.identity)
+        merge = jnp.minimum
+    else:
+        agg0 = jnp.full(c, program.identity)
+        merge = jnp.maximum
+
+    def process_one(values, row):
+        t0 = tile_start[row]
+
+        def tile_body(t, agg):
+            r = t0 + t
+            e_src = src[r]
+            msg = program.edge_map(values[e_src], aux[e_src], ew[r])
+            msg = jnp.where(evalid[r], msg, program.identity)
+            return merge(agg,
+                         _combine_local(program, msg, dstl[r], c, use_pallas))
+
+        agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
+        base = row * c
+        old = lax.dynamic_slice(values, (base,), (c,))
+        new = program.apply(old, agg, n_total)
+        vmask = (base + jnp.arange(c)) < n_live
+        new = jnp.where(vmask, new, old)
+        delta = jnp.where(vmask, program.sd_delta(old, new), 0.0)
+        cnt = jnp.maximum(vmask.sum(), 1)
+        return base, new, delta.sum() / cnt, delta.max()
+
+    def process_iterated(values, row, t_inner):
+        """Asynchronous hot mode (see make_block_processor): t_inner
+        block-local Gauss-Seidel passes per partition load."""
+        base = row * c
         old = lax.dynamic_slice(values, (base,), (c,))
 
         def inner(_, vals):
@@ -228,20 +316,66 @@ class StructureAwareEngine:
             return psd, jnp.zeros_like(dmax)
         return post
 
+    def _acct_table(self) -> np.ndarray:
+        """(P, len(COUNTER_FIELDS)) host-side accounting row per schedule of
+        a block: [vertices updated, edges processed, 1 load, bytes loaded].
+        The device only counts schedules per block (small exact int32s);
+        the host multiplies through this table at flush time, so metric
+        totals stay exact at any scale."""
+        p = self.plan
+        acct = np.zeros((p.num_blocks, 4), dtype=np.int64)
+        for b in range(p.num_blocks):
+            lo, hi = p.block_range(b)
+            acct[b] = (hi - lo, int(p.unified.edges[b]), 1,
+                       p.block_bytes(b))
+        return acct
+
     # -- jitted block processing -------------------------------------------
-    def _get_fn(self, store_key: str, sequential: bool) -> Callable:
-        key = (store_key, sequential)
-        if key in self._fns:
-            return self._fns[key]
-        store: EdgeStorage = getattr(self.plan, store_key)
-        program, cfg, plan = self.program, self.config, self.plan
-        c = plan.block_size
+    def _processor(self):
+        if getattr(self, "_proc", None) is None:
+            plan, cfg = self.plan, self.config
+            self._proc = make_tiled_processor(
+                self.program, plan.unified, self.aux, plan.block_size,
+                plan.n_live, plan.graph.n, cfg.use_pallas)
+        return self._proc
+
+    def _sweeps(self):
+        """(hot_sweep, cold_sweep): the two dispatch bodies, shared at trace
+        time by the host-loop fns and the fused superstep so the semantics
+        cannot diverge. Both take (values, psd, dmax, rows, ok) with (W,)
+        block-id slots; hot is sequential (async, each block sees earlier
+        writes), cold reads one snapshot (sync)."""
+        cfg, plan = self.config, self.plan
         width = cfg.width
         t_inner = max(cfg.hot_inner_iters, 1)
-        process_one, process_iterated, gids = make_block_processor(
-            program, store, self.aux, c, plan.n_live, plan.graph.n,
-            cfg.use_pallas)
+        process_one, process_iterated, gids = self._processor()
+        write_one = self._write_one(plan.block_size)
 
+        def hot_sweep(values, psd, dmax, rows, ok):
+            def body(i, carry):
+                values, psd, dmax = carry
+                row = rows[i]
+                base, new, psd_val, dmax_val = process_iterated(
+                    values, row, t_inner)
+                return write_one(values, psd, dmax, base, new, psd_val,
+                                 dmax_val, gids[row], ok[i])
+            return lax.fori_loop(0, width, body, (values, psd, dmax))
+
+        def cold_sweep(values, psd, dmax, rows, ok):
+            bases, news, psd_vals, dmax_vals = jax.vmap(
+                lambda r: process_one(values, r))(rows)
+
+            def body(i, carry):
+                values, psd, dmax = carry
+                return write_one(values, psd, dmax, bases[i], news[i],
+                                 psd_vals[i], dmax_vals[i],
+                                 gids[rows[i]], ok[i])
+            return lax.fori_loop(0, width, body, (values, psd, dmax))
+
+        return hot_sweep, cold_sweep
+
+    @staticmethod
+    def _write_one(c):
         def write_one(values, psd, dmax, base, new, psd_val, dmax_val, gid,
                       ok):
             cur = lax.dynamic_slice(values, (base,), (c,))
@@ -250,53 +384,32 @@ class StructureAwareEngine:
             psd = jnp.where(ok, psd.at[gid].set(psd_val), psd)
             dmax = jnp.where(ok, dmax.at[gid].set(dmax_val), dmax)
             return values, psd, dmax
+        return write_one
 
-        if sequential:  # async mode: later blocks see earlier updates
-            def run(values, psd, dmax, rows, slot_ok):
-                def body(i, carry):
-                    values, psd, dmax = carry
-                    row = rows[i]
-                    base, new, psd_val, dmax_val = process_iterated(
-                        values, row, t_inner)
-                    return write_one(values, psd, dmax, base, new, psd_val,
-                                     dmax_val, gids[row], slot_ok[i])
-                return lax.fori_loop(0, width, body, (values, psd, dmax))
-        else:  # sync mode: all blocks read the same snapshot
-            def run(values, psd, dmax, rows, slot_ok):
-                bases, news, psd_vals, dmax_vals = jax.vmap(
-                    lambda r: process_one(values, r))(rows)
-
-                def body(i, carry):
-                    values, psd, dmax = carry
-                    return write_one(values, psd, dmax, bases[i], news[i],
-                                     psd_vals[i], dmax_vals[i],
-                                     gids[rows[i]], slot_ok[i])
-                return lax.fori_loop(0, width, body, (values, psd, dmax))
-
-        fn = jax.jit(run, donate_argnums=(0, 1, 2))
+    def _get_fn(self, sequential: bool) -> Callable:
+        key = ("unified", sequential)
+        if key in self._fns:
+            return self._fns[key]
+        hot_sweep, cold_sweep = self._sweeps()
+        fn = jax.jit(hot_sweep if sequential else cold_sweep,
+                     donate_argnums=(0, 1, 2))
         self._fns[key] = fn
         return fn
 
-    # -- host-side dispatch ---------------------------------------------------
+    # -- host-side dispatch (run(fused=False) reference path) ---------------
     def _dispatch(self, values, psd, dmax, block_ids: np.ndarray,
                   sequential: bool):
-        """Route global block ids to their storage group and run."""
-        p, w = self.plan, self.config.width
-        for store_key, cond in (("hot", block_ids < p.barrier_block),
-                                ("cold", block_ids >= p.barrier_block)):
-            ids = block_ids[cond]
-            if ids.size == 0:
-                continue
-            offset = 0 if store_key == "hot" else p.barrier_block
-            for at in range(0, ids.size, w):
-                chunk = ids[at:at + w]
-                rows = np.zeros(w, dtype=np.int32)
-                ok = np.zeros(w, dtype=bool)
-                rows[:chunk.size] = (chunk - offset).astype(np.int32)
-                ok[:chunk.size] = True
-                fn = self._get_fn(store_key, sequential)
-                values, psd, dmax = fn(values, psd, dmax, jnp.asarray(rows),
-                                       jnp.asarray(ok))
+        """Run the selected blocks through the unified processor."""
+        w = self.config.width
+        for at in range(0, block_ids.size, w):
+            chunk = block_ids[at:at + w]
+            rows = np.zeros(w, dtype=np.int32)
+            ok = np.zeros(w, dtype=bool)
+            rows[:chunk.size] = chunk.astype(np.int32)
+            ok[:chunk.size] = True
+            fn = self._get_fn(sequential)
+            values, psd, dmax = fn(values, psd, dmax, jnp.asarray(rows),
+                                   jnp.asarray(ok))
         return values, psd, dmax
 
     def _account(self, metrics: Metrics, ids: np.ndarray):
@@ -306,12 +419,135 @@ class StructureAwareEngine:
             metrics.updates += hi - lo
             metrics.block_loads += 1
             metrics.bytes_loaded += p.block_bytes(int(b))
-            store = p.hot if b < p.barrier_block else p.cold
-            row = int(b) if b < p.barrier_block else int(b) - p.barrier_block
-            metrics.edges_processed += int(store.edges[row])
+            metrics.edges_processed += int(p.unified.edges[int(b)])
+
+    # -- fused device-resident loop -----------------------------------------
+    def _get_chunk(self) -> Callable:
+        """Jitted multi-iteration chunk: lax.while_loop over fused
+        supersteps (schedule -> hot -> cold -> staleness post -> convergence
+        test), stopping at the iteration cap, at convergence, or when the
+        schedule goes empty. The host supplies the (constant within a
+        chunk) hot/cold labels and consumes one psd/counters sync per call.
+        """
+        if "chunk" in self._fns:
+            return self._fns["chunk"]
+        cfg, plan = self.config, self.plan
+        t2 = cfg.t2
+        hot_sweep, cold_sweep = self._sweeps()
+        post = self._make_post()
+        tile_cnt = plan.unified.tile_cnt
+        select = make_device_select(
+            width=cfg.width, i2=cfg.i2, cold_frac=cfg.cold_frac,
+            min_psd=cfg.t2 / max(plan.num_blocks, 1),
+            pad_id=int(np.argmin(tile_cnt)) if tile_cnt.size else 0)
+
+        def superstep(it, values, psd, dmax, counts, is_hot):
+            hot_rows, hot_ok, cold_rows, cold_ok = select(it, psd, is_hot)
+            values, psd, dmax = hot_sweep(values, psd, dmax, hot_rows,
+                                          hot_ok)
+            values, psd, dmax = cold_sweep(values, psd, dmax, cold_rows,
+                                           cold_ok)
+            counts = counts.at[hot_rows].add(hot_ok.astype(jnp.int32))
+            counts = counts.at[cold_rows].add(cold_ok.astype(jnp.int32))
+            psd, dmax = post(psd, dmax)  # staleness propagation
+            scheduled = hot_ok.any() | cold_ok.any()
+            return values, psd, dmax, counts, scheduled
+
+        def chunk(values, psd, dmax, counts, it0, it_end, is_hot):
+            def cond(carry):
+                it, _, _, _, _, done = carry
+                return (it < it_end) & jnp.logical_not(done)
+
+            def body(carry):
+                it, values, psd, dmax, counts, _ = carry
+                values, psd, dmax, counts, scheduled = superstep(
+                    it, values, psd, dmax, counts, is_hot)
+                conv = state_lib.converged_device(psd, t2)
+                # empty schedule: no iteration happened (host parity: the
+                # reference loop breaks before processing)
+                it = it + jnp.where(scheduled, 1, 0).astype(it.dtype)
+                done = conv | jnp.logical_not(scheduled)
+                return it, values, psd, dmax, counts, done
+
+            it, values, psd, dmax, counts, _ = lax.while_loop(
+                cond, body,
+                (it0, values, psd, dmax, counts, jnp.bool_(False)))
+            return (it, values, psd, dmax, counts,
+                    state_lib.converged_device(psd, t2))
+
+        fn = jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
+        self._fns["chunk"] = fn
+        return fn
 
     # -- main loop ----------------------------------------------------------
-    def run(self, max_iterations: int | None = None) -> RunResult:
+    def run(self, max_iterations: int | None = None,
+            fused: bool | None = None) -> RunResult:
+        """Run to convergence. ``fused`` overrides ``config.fused``:
+        True = device-resident chunked loop (host syncs only at repartition
+        boundaries), False = reference host-driven loop (one sync per
+        iteration, per-iteration history)."""
+        fused = self.config.fused if fused is None else fused
+        if fused:
+            return self._run_fused(max_iterations)
+        return self._run_host(max_iterations)
+
+    def _run_fused(self, max_iterations: int | None = None) -> RunResult:
+        cfg, p = self.config, self.plan
+        max_it = max_iterations or cfg.max_iterations
+        mode = "barrier" if self.program.monotone_cooling else "universal"
+        rep = RepartitionState.create(
+            p.num_blocks, p.barrier_block, mode,
+            interval=cfg.repartition_interval, growth=cfg.repartition_growth)
+        chunk = self._get_chunk()
+
+        values = jnp.asarray(self.values0)
+        psd = jnp.asarray(state_lib.init_psd(p.num_blocks))
+        dmax = jnp.zeros(p.num_blocks, jnp.float32)
+        acct = self._acct_table()
+        metrics = Metrics()
+        history = []
+
+        with Timer() as t:
+            it = 0
+            while it < max_it:
+                it_end = rep.chunk_end(max_it)
+                # the device counts schedules per block (exact chunk-sized
+                # int32s, zeroed each chunk); the host expands them through
+                # the int64 accounting table at the boundary
+                it_dev, values, psd, dmax, counts, conv = chunk(
+                    values, psd, dmax,
+                    jnp.zeros(p.num_blocks, jnp.int32),
+                    jnp.int32(it), jnp.int32(it_end),
+                    jnp.asarray(rep.is_hot))
+                # the chunk's single host sync point
+                it_new = int(it_dev)
+                psd_host = np.asarray(psd)
+                counts_host = np.asarray(counts, dtype=np.int64)
+                delta = counts_host @ acct
+                metrics.absorb_counters(delta)
+                history.append({
+                    "iteration": max(it_new - 1, 0),
+                    "span": it_new - it,  # iterations covered by this entry
+                    "psd_sum": float(psd_host[psd_host <
+                                              state_lib.UNSEEN].sum()),
+                    "unseen": int((psd_host >= state_lib.UNSEEN).sum()),
+                    "hot_blocks": int(rep.is_hot.sum()),
+                    "scheduled": int(round(float(delta[2]))),  # block loads
+                })
+                if bool(conv):
+                    metrics.converged = True
+                    it = it_new
+                    break
+                if it_new == it:  # schedule went empty: nothing left to do
+                    break
+                it = it_new
+                rep.maybe_repartition(it - 1, psd_host, cfg.hot_ratio)
+        metrics.iterations = it
+        metrics.wall_time_s = t.elapsed
+        out = np.asarray(values)[self.plan.inv]  # back to original ids
+        return RunResult(values=out, metrics=metrics, history=history)
+
+    def _run_host(self, max_iterations: int | None = None) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
         mode = "barrier" if self.program.monotone_cooling else "universal"

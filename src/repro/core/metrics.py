@@ -11,6 +11,14 @@ import dataclasses
 import time
 
 
+# Order of the accounting vector the fused engine flushes at repartition
+# boundaries: the device accumulates exact per-block schedule counts, the
+# host expands them through a per-block [vertices, edges, loads, bytes]
+# table into this layout.
+COUNTER_FIELDS = ("updates", "edges_processed", "block_loads",
+                  "bytes_loaded")
+
+
 @dataclasses.dataclass
 class Metrics:
     iterations: int = 0
@@ -23,6 +31,12 @@ class Metrics:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def absorb_counters(self, counters) -> None:
+        """Add a (len(COUNTER_FIELDS),) device-counter flush (cumulative
+        deltas, COUNTER_FIELDS order)."""
+        for name, v in zip(COUNTER_FIELDS, counters):
+            setattr(self, name, getattr(self, name) + int(round(float(v))))
 
 
 class Timer:

@@ -8,14 +8,26 @@ its in-edges are a contiguous CSC range — dynamic repartitioning later only
 re-labels blocks (barrier move / flag flip), never moves vertices, matching
 the paper's O(n) bookkeeping claim.
 
-Storage layout: blocks are padded to a common edge capacity per *storage
-group* (hot-born vs cold-born). Hot blocks contain the hubs and need a large
-capacity; cold blocks stay small. Padding is masked with a validity bit, so
-any combine (sum/min/max) stays exact.
+Storage layouts:
+
+  * per-group padded rows (:class:`EdgeStorage`): blocks padded to a common
+    edge capacity per *storage group* (hot-born vs cold-born). Hot blocks
+    contain the hubs and need a large capacity; cold blocks stay small.
+    Used by the shard_map distributed engine.
+  * unified tiled rows (:class:`TiledStorage`): every block's in-edges are
+    chunked into fixed (TILE,)-wide tile rows, and each block owns a
+    contiguous run of tile rows. One jitted function can process ANY block
+    id (no host-side hot/cold routing) while compute stays proportional to
+    the block's true edge count — padding a cold block (≈1e3 edges) to the
+    hub block's capacity (≈1e5) would be an ~80x per-block blowup.
+
+Padding is masked with a validity bit in both layouts, so any combine
+(sum/min/max) stays exact.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -47,6 +59,71 @@ class EdgeStorage:
         return int(self.src.shape[1])
 
 
+TILE = 512  # tile width of the unified layout (multiple of the 128 lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TiledStorage:
+    """Unified per-block in-edge tiles: block b owns tile rows
+    [tile_start[b], tile_start[b] + tile_cnt[b]).
+
+    Shapes: (n_tiles, TILE) for the edge arrays; (num_blocks,) for the
+    per-block indices. ``src`` indexes the owning graph's vertex space;
+    ``dst_local`` is the destination offset within the block.
+    """
+
+    src: np.ndarray  # (n_tiles, TILE) int32
+    dst_local: np.ndarray  # (n_tiles, TILE) int32
+    w: np.ndarray  # (n_tiles, TILE) float32
+    valid: np.ndarray  # (n_tiles, TILE) bool
+    tile_start: np.ndarray  # (num_blocks,) int32
+    tile_cnt: np.ndarray  # (num_blocks,) int32
+    edges: np.ndarray  # (num_blocks,) true edge count per block
+
+    @property
+    def num_blocks(self) -> int:
+        return int(self.tile_start.shape[0])
+
+    @property
+    def tile(self) -> int:
+        return int(self.src.shape[1])
+
+
+def build_tiled_storage(g: Graph, block_size: int, num_blocks: int,
+                        tile: int = TILE) -> TiledStorage:
+    """Chunk every block's contiguous CSC in-edge range into tile rows."""
+    counts = np.empty(num_blocks, dtype=np.int64)
+    for b in range(num_blocks):
+        lo, hi = b * block_size, min((b + 1) * block_size, g.n)
+        counts[b] = int(g.in_indptr[hi] - g.in_indptr[lo])
+    tile_cnt = -(-counts // tile)
+    tile_start = np.concatenate([[0], np.cumsum(tile_cnt)[:-1]])
+    n_tiles = max(int(tile_cnt.sum()), 1)
+
+    src = np.zeros((n_tiles, tile), dtype=np.int32)
+    dstl = np.zeros((n_tiles, tile), dtype=np.int32)
+    w = np.zeros((n_tiles, tile), dtype=np.float32)
+    valid = np.zeros((n_tiles, tile), dtype=bool)
+    for b in range(num_blocks):
+        lo, hi = b * block_size, min((b + 1) * block_size, g.n)
+        e0, e1 = int(g.in_indptr[lo]), int(g.in_indptr[hi])
+        e = e1 - e0
+        if e == 0:
+            continue
+        t0 = int(tile_start[b]) * tile
+        flat = slice(t0, t0 + e)
+        src.reshape(-1)[flat] = g.in_src[e0:e1]
+        w.reshape(-1)[flat] = g.in_w[e0:e1]
+        dst = np.repeat(np.arange(lo, hi, dtype=np.int64),
+                        np.diff(g.in_indptr[lo:hi + 1]))
+        dstl.reshape(-1)[flat] = (dst - lo).astype(np.int32)
+        valid.reshape(-1)[flat] = True
+    return TiledStorage(src=src, dst_local=dstl, w=w, valid=valid,
+                        tile_start=tile_start.astype(np.int32),
+                        tile_cnt=tile_cnt.astype(np.int32),
+                        edges=counts)
+
+
 @dataclasses.dataclass(frozen=True)
 class PartitionPlan:
     """Everything the engine needs after one-time preprocessing."""
@@ -59,11 +136,27 @@ class PartitionPlan:
     n_live: int
     n_dead: int
     barrier_block: int  # blocks [0, barrier) born hot, [barrier, P) born cold
-    hot: EdgeStorage
-    cold: EdgeStorage
+    unified: TiledStorage  # all blocks, one layout (row index = block id)
     ad: np.ndarray  # AD in permuted order (diagnostics)
     t1: float  # AD threshold used
     alpha: float
+
+    # Group-padded storages are only consumed by the shard_map distributed
+    # engine (and its tests); built lazily so the common single-device path
+    # never pays the O(blocks_in_group * group_max_edges) padding cost on
+    # top of the unified layout.
+    @functools.cached_property
+    def hot(self) -> EdgeStorage:
+        return _build_storage(
+            self.graph, np.arange(0, self.barrier_block, dtype=np.int64),
+            self.block_size)
+
+    @functools.cached_property
+    def cold(self) -> EdgeStorage:
+        return _build_storage(
+            self.graph,
+            np.arange(self.barrier_block, self.num_blocks, dtype=np.int64),
+            self.block_size)
 
     @property
     def dead_start(self) -> int:
@@ -76,9 +169,7 @@ class PartitionPlan:
     def block_bytes(self, b: int) -> int:
         """I/O proxy: bytes loaded when block b is scheduled (edge src ids +
         weights + dst offsets + the block's vertex values)."""
-        store = self.hot if b < self.barrier_block else self.cold
-        row = int(np.searchsorted(store.block_ids, b))
-        e = int(store.edges[row])
+        e = int(self.unified.edges[b])
         return e * (4 + 4 + 4) + self.block_size * 4
 
 
@@ -147,11 +238,8 @@ def build_plan(g: Graph, *, block_size: int = 256, alpha: float | None = None,
     if num_blocks and barrier == 0 and n_live:
         barrier = 1  # always at least one hot block to seed the schedule
 
-    hot_ids = np.arange(0, barrier, dtype=np.int64)
-    cold_ids = np.arange(barrier, num_blocks, dtype=np.int64)
-    hot = _build_storage(pg, hot_ids, block_size)
-    cold = _build_storage(pg, cold_ids, block_size)
+    unified = build_tiled_storage(pg, block_size, num_blocks)
     return PartitionPlan(graph=pg, inv=inv, order=order, block_size=block_size,
                          num_blocks=num_blocks, n_live=n_live, n_dead=n_dead,
-                         barrier_block=barrier, hot=hot, cold=cold,
-                         ad=ad_perm, t1=t1, alpha=alpha)
+                         barrier_block=barrier, unified=unified, ad=ad_perm,
+                         t1=t1, alpha=alpha)

@@ -38,6 +38,12 @@ class RepartitionState:
         return cls(mode=mode, is_hot=is_hot, barrier=born_barrier,
                    interval=interval, growth=growth, next_at=interval)
 
+    def chunk_end(self, max_iterations: int) -> int:
+        """Exclusive end of the device-resident iteration chunk: the fused
+        engine runs through the iteration at which the repartition cadence
+        fires (inclusive), then hands control back to the host."""
+        return min(self.next_at + 1, max_iterations)
+
     def maybe_repartition(self, iteration: int, psd: np.ndarray,
                           hot_ratio: float = 0.1) -> bool:
         """Re-label blocks if the cadence fires. Returns True if it ran."""

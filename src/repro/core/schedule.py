@@ -5,11 +5,20 @@ also admits the n highest-PSD cold blocks, with m + n = the worker count
 (paper: the CPU count; here: the schedule width = devices on the data axis x
 blocks per device) and m > n. When no hot blocks remain, the full width goes
 to the highest-PSD cold blocks.
+
+Two implementations of the same policy:
+
+  * :meth:`Scheduler.select` — numpy, host-driven loop (reference);
+  * :func:`make_device_select` — jnp, traced into the fused superstep so
+    scheduling never leaves the device. Kept decision-identical to the numpy
+    version (same blocks, same order, same tie-breaking) under a shared
+    property test (tests/test_engines.py::test_device_select_matches_numpy).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -51,3 +60,62 @@ class Scheduler:
         n = w - hot_pick.size if hot_pick.size < m else n
         cold_pick = cold_ids[np.argsort(-psd[cold_ids], kind="stable")][:n]
         return Selection(hot_ids=hot_pick, cold_ids=cold_pick)
+
+
+def make_device_select(width: int, i2: int, cold_frac: float,
+                       min_psd: float, pad_id: int = 0):
+    """jnp port of :meth:`Scheduler.select` for the fused superstep.
+
+    Returns ``select(iteration, psd, is_hot) -> (hot_rows, hot_ok,
+    cold_rows, cold_ok)``: fixed-width (W,) block-id slots plus validity
+    masks, where ``hot_rows[hot_ok]`` equals ``Selection.hot_ids`` (same
+    blocks, same order) and likewise for cold. Tie-breaking matches the
+    numpy version exactly: descending PSD, lowest block id first on equal
+    PSD (a stable sort over ids in ascending order).
+
+    ``pad_id`` fills slots beyond the take counts. Those slots are never
+    marked ok, but the fused sweeps still *compute* them (discarding the
+    result), so callers should pass their cheapest block id — padding with
+    block 0 would bill every dead slot at the post-sort hub block's cost.
+    """
+    n_cold_quota = int(width * cold_frac)
+    slots = jnp.arange(width)
+
+    def select(iteration, psd, is_hot):
+        live = psd >= min_psd
+        hot_live = is_hot & live
+        cold_live = jnp.logical_not(is_hot) & live
+        n_hot = hot_live.sum()
+        n_cold = cold_live.sum()
+        # Dead slots sink to -inf: a stable ascending argsort of the negated
+        # key yields (psd desc, id asc) — identical to np.flatnonzero order
+        # followed by a stable sort on -psd.
+        hot_order = jnp.argsort(
+            jnp.where(hot_live, -psd, jnp.inf), stable=True)
+        cold_order = jnp.argsort(
+            jnp.where(cold_live, -psd, jnp.inf), stable=True)
+        if i2:
+            is_i2 = iteration % i2 == 0
+            m = jnp.where(is_i2, width - n_cold_quota, width)
+            n = jnp.where(is_i2, n_cold_quota, 0)
+        else:
+            m = jnp.int32(width)
+            n = jnp.int32(0)
+        hot_take = jnp.minimum(m, n_hot)
+        # work-conserving top-up (also covers the no-hot-blocks case:
+        # hot_take == 0 < m hands the full width to cold)
+        n = jnp.where(hot_take < m, width - hot_take, n)
+        cold_take = jnp.minimum(n, n_cold)
+
+        def to_slots(order, take):
+            # slots beyond the take (and beyond P when P < width) carry
+            # pad_id, not whatever pruned block the argsort left there
+            k = min(width, order.shape[0])
+            rows = jnp.full(width, pad_id, jnp.int32).at[:k].set(
+                order[:k].astype(jnp.int32))
+            return jnp.where(slots < take, rows, pad_id)
+
+        return (to_slots(hot_order, hot_take), slots < hot_take,
+                to_slots(cold_order, cold_take), slots < cold_take)
+
+    return select

@@ -27,6 +27,15 @@ def converged(psd: np.ndarray, t2: float) -> bool:
     return bool(np.asarray(psd, dtype=np.float64).sum() < t2)
 
 
+def converged_device(psd, t2: float):
+    """Traced SUM(PSD) < T2 for the fused superstep. f32 sum: UNSEEN
+    sentinels keep the sum far above any realistic T2 (overflow to +inf is
+    also a correct 'not converged'), and near the threshold every PSD is
+    tiny so the f32 accumulation error is negligible against T2."""
+    import jax.numpy as jnp
+    return jnp.sum(psd) < jnp.float32(t2)
+
+
 def psd_threshold(psd: np.ndarray, hot_ratio: float = 0.1) -> float:
     """Adaptive T1-for-PSD used at repartition time: the hot_ratio quantile of
     the currently-seen PSDs (the paper reuses the symbol T1 for both the AD

@@ -172,9 +172,21 @@ def _shrink(cfg, layers: int):
     return dataclasses.replace(cfg, **kw)
 
 
+def _peak_bytes(mem) -> int:
+    """Peak live bytes. jax 0.4.x's CompiledMemoryStats has no peak stat;
+    the arg+output+temp sum is the standard conservative upper bound."""
+    peak = int(getattr(mem, "peak_memory_in_bytes", 0) or 0)
+    if peak <= 0:
+        peak = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes)
+    return peak
+
+
 def _cost_of(lowered) -> dict:
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
@@ -231,7 +243,7 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         "output_bytes": int(mem.output_size_in_bytes),
         "temp_bytes": int(mem.temp_size_in_bytes),
         "alias_bytes": int(mem.alias_size_in_bytes),
-        "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        "peak_bytes": _peak_bytes(mem),
         "compile_s": round(t_full, 2),
         "variants_s": round(t_variants, 2),
         "params": cfg.param_count(),
@@ -302,6 +314,8 @@ def lower_graph_cell(mesh, mesh_name: str, n: int = 2_000_000,
                       out_shardings=(repl, repl)).lower(*args)
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text())
     return {"status": "ok", "mesh": mesh_name, "devices": int(mesh.size),

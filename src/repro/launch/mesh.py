@@ -5,26 +5,43 @@ jax device state (the dry-run must set XLA_FLAGS before first jax init).
 
 Topology (TPU v5e): one pod = 16x16 = 256 chips; multi-pod = 2 pods over
 DCN. Axes: "pod" (DCN, slow) > "data" (DP / ZeRO) > "model" (TP/EP/SP).
+
+Compat: ``jax.sharding.AxisType`` only exists on newer jax (>= 0.5); on the
+pinned 0.4.x every mesh axis already behaves like ``Auto``, so the builders
+simply omit the kwarg there.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: meshes are implicitly all-Auto
+    AxisType = None
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types when supported."""
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """All local devices -> ("data", "model") mesh (tests / CPU training)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

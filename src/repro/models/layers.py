@@ -19,7 +19,11 @@ def rms_norm(x, weight, eps: float = 1e-6):
 
 def swiglu(x, w_gate, w_up, w_down):
     h = jax.nn.silu(x @ w_gate) * (x @ w_up)
-    return h @ w_down
+    # f32 accumulation on the d_ff contraction: under tensor parallelism this
+    # reduction is sharded, and bf16 partial sums make the all-reduce diverge
+    # from the single-device result by more than bf16 rounding of one matmul.
+    return jnp.matmul(h, w_down,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 def rope_freqs(head_dim: int, theta: float):

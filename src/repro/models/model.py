@@ -62,8 +62,13 @@ def _attn_params(key, cfg: ArchConfig, d: int):
         "wq": dense_init(ks[0], (d, hq * dh)),
         "wk": dense_init(ks[1], (d, hkv * dh)),
         "wv": dense_init(ks[2], (d, hkv * dh)),
-        "wo": dense_init(ks[3], (hq * dh, d),
-                         scale=(cfg.num_heads * dh) ** -0.5),
+        # Residual-branch output projection starts at zero (skip-init): each
+        # block is the identity at step 0, so the residual stream carries no
+        # init-time drift. Near-uniform attention at random init otherwise
+        # emits a near-constant vector per layer whose accumulated mean
+        # component swamps token-dependent signal (and e.g. biases MoE
+        # routing) before training has moved any weights.
+        "wo": jnp.zeros((hq * dh, d), jnp.float32),
     }
     # EXACT padding: zero the padded head slices (wq/wk/wv columns, wo
     # rows). Padded q heads then see uniform attention over zero values ->

@@ -1,0 +1,95 @@
+"""Optional-hypothesis shim for the property tests.
+
+When the real ``hypothesis`` package is installed (``pip install -r
+requirements-dev.txt``) this module re-exports it unchanged and the suite
+gets full randomized property testing with shrinking. When it is absent,
+``@given`` degrades to running the test body on a small deterministic set of
+examples drawn from the declared strategies (bounds first, then seeded
+pseudo-random draws), so the tier-1 suite still exercises every property.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        """A draw function plus the deterministic boundary examples that are
+        always exercised before any random draws."""
+
+        def __init__(self, draw, boundary=()):
+            self._draw = draw
+            self.boundary = tuple(boundary)
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                boundary=(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))],
+                boundary=elements[:1])
+
+        @staticmethod
+        def floats(min_value, max_value, **_):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)),
+                             boundary=(lo, hi))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)),
+                             boundary=(False, True))
+
+    st = _StrategiesModule()
+
+    _FALLBACK_EXAMPLES = 5  # examples per test when hypothesis is absent
+
+    def given(**strategies):
+        def deco(fn):
+            # NOT functools.wraps: pytest would introspect the wrapped
+            # signature and treat the strategy kwargs as fixtures.
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                n = min(getattr(fn, "_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                cases = []
+                # one all-boundary case (first bound of every strategy), then
+                # seeded random draws for the rest
+                cases.append({k: s.boundary[0] if s.boundary else s.draw(rng)
+                              for k, s in strategies.items()})
+                while len(cases) < n:
+                    cases.append({k: s.draw(rng)
+                                  for k, s in strategies.items()})
+                for case in cases:
+                    try:
+                        fn(*args, **case, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (hypothesis-compat): "
+                            f"{case}") from e
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -142,9 +142,8 @@ def test_dryrun_plumbing_small_mesh():
         from repro import configs
         from repro.models.config import ShapeConfig, SHAPES
         import dataclasses
-        from jax.sharding import AxisType
-        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                             axis_types=(AxisType.Auto,) * 3)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
         # tiny shape grid against the reduced config
         SHAPES['t_train'] = ShapeConfig('t_train', 64, 8, 'train')
         SHAPES['t_dec'] = ShapeConfig('t_dec', 64, 8, 'decode')

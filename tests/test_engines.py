@@ -3,7 +3,7 @@ oracles, on every algorithm, across graph families (the paper's exactness
 requirement — scheduling must never change results)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from conftest import bellman_ford_oracle, cc_oracle, pr_oracle
 from repro.core import algorithms as A
@@ -11,7 +11,7 @@ from repro.core import graph as G
 from repro.core.baseline import BaselineEngine
 from repro.core.engine import EngineConfig, StructureAwareEngine, betweenness
 from repro.core.repartition import RepartitionState
-from repro.core.schedule import Scheduler
+from repro.core.schedule import Scheduler, make_device_select
 from repro.core import state as state_lib
 
 CFG = EngineConfig(t2=1e-9, width=8, block_size=256)
@@ -95,6 +95,79 @@ def test_dead_partition_one_shot():
     res = eng.run()
     # dead PR value = (1-d)/n exactly
     assert np.allclose(res.values[2:], 0.15 / 10, atol=1e-7)
+
+
+# -- fused superstep loop ----------------------------------------------------
+@given(n=st.integers(100, 800), avg=st.integers(2, 6),
+       seed=st.integers(0, 20),
+       algo=st.sampled_from(["pagerank", "sssp", "bfs", "cc"]))
+@settings(max_examples=10, deadline=None)
+def test_fused_matches_host_loop_property(n, avg, seed, algo):
+    """Property: the device-resident lax.while_loop engine reaches the SAME
+    fixpoint as the host-driven reference loop — values, iteration count,
+    and metric accounting — for every program class (sum + min/max, i.e.
+    barrier + universal repartitioning with the cold re-heat path)."""
+    g = G.powerlaw_graph(n, avg_deg=avg, seed=seed, weighted=True)
+    prog = {"pagerank": A.pagerank, "cc": A.cc,
+            "sssp": lambda: A.sssp(0), "bfs": lambda: A.bfs(0)}[algo]()
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128)
+    host = StructureAwareEngine(g, prog, cfg).run(fused=False)
+    fused = StructureAwareEngine(g, prog, cfg).run(fused=True)
+    assert _close(host.values, fused.values, rtol=1e-5, atol=1e-6)
+    assert abs(host.metrics.iterations - fused.metrics.iterations) <= 1
+    assert host.metrics.converged == fused.metrics.converged
+    assert host.metrics.updates == fused.metrics.updates
+    assert host.metrics.block_loads == fused.metrics.block_loads
+    assert host.metrics.bytes_loaded == fused.metrics.bytes_loaded
+
+
+def test_fused_reheat_path():
+    """Universal mode on a traversal program: cold blocks must re-heat when
+    the wavefront reaches them after their PSD decayed, across several
+    repartition boundaries, and the fused loop must agree with the
+    reference loop through all of them."""
+    g = G.uniform_graph(3000, deg=4, seed=9, weighted=True)
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128,
+                       repartition_interval=2, repartition_growth=1.2)
+    host = StructureAwareEngine(g, A.sssp(0), cfg).run(fused=False)
+    fused = StructureAwareEngine(g, A.sssp(0), cfg).run(fused=True)
+    assert fused.metrics.converged and host.metrics.converged
+    assert _close(host.values, fused.values, rtol=1e-5, atol=1e-6)
+    assert len(fused.history) > 2  # several host consultations happened
+    oracle = bellman_ford_oracle(g, 0)
+    assert _close(fused.values, oracle.astype(np.float32), rtol=1e-5,
+                  atol=1e-3)
+
+
+def test_fused_host_sync_cadence():
+    """Host transfers are O(iterations / repartition_interval): one history
+    entry per repartition boundary, each covering a whole chunk."""
+    g = G.powerlaw_graph(2000, 6, seed=2)
+    res = StructureAwareEngine(g, A.pagerank(), CFG).run(fused=True)
+    spans = [h["span"] for h in res.history]
+    assert sum(spans) == res.metrics.iterations
+    assert len(res.history) < res.metrics.iterations  # chunked, not per-iter
+    assert max(spans) > 1
+
+
+@given(p=st.integers(2, 40), width=st.integers(1, 12),
+       i2=st.integers(0, 5), it=st.integers(0, 9), seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_device_select_matches_numpy(p, width, i2, it, seed):
+    """The jnp scheduler is decision-identical to the numpy reference:
+    same blocks, same order, same tie-breaking."""
+    rng = np.random.default_rng(seed)
+    psd = rng.choice([0.0, 1e-13, 0.5, 0.5, 1.0, 2.0, state_lib.UNSEEN],
+                     size=p).astype(np.float32)
+    is_hot = rng.random(p) < 0.4
+    sched = Scheduler(width=width, i2=i2, cold_frac=0.25, min_psd=1e-12)
+    sel = sched.select(it, psd, is_hot)
+    dev = make_device_select(width=width, i2=i2, cold_frac=0.25,
+                             min_psd=1e-12)
+    hot_rows, hot_ok, cold_rows, cold_ok = (np.asarray(x) for x in
+                                            dev(it, psd, is_hot))
+    assert np.array_equal(hot_rows[hot_ok], sel.hot_ids)
+    assert np.array_equal(cold_rows[cold_ok], sel.cold_ids)
 
 
 # -- scheduler / repartition units -------------------------------------------

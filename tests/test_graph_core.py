@@ -1,7 +1,7 @@
 """Unit + property tests: degrees (Eq. 1/2), partitioning (Alg. 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import degrees, graph as G
 from repro.core.partition import build_plan
@@ -66,6 +66,26 @@ def test_partition_plan_invariants(n, avg, seed):
     # block edge slices cover ALL in-edges of live vertices exactly once
     total = int(plan.hot.edges.sum() + plan.cold.edges.sum())
     assert total == plan.graph.m
+
+
+@given(n=st.integers(50, 400), avg=st.integers(2, 8),
+       seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_unified_tiled_storage_invariants(n, avg, seed):
+    g = G.powerlaw_graph(n, avg_deg=avg, seed=seed)
+    plan = build_plan(g, block_size=64)
+    u = plan.unified
+    # lane-aligned tiles, per-block ownership covers every in-edge once
+    assert u.tile % 128 == 0
+    assert u.num_blocks == plan.num_blocks
+    assert int(u.edges.sum()) == plan.graph.m
+    for b in range(plan.num_blocks):
+        t0, tc = int(u.tile_start[b]), int(u.tile_cnt[b])
+        assert tc == -(-int(u.edges[b]) // u.tile)
+        assert int(u.valid[t0:t0 + tc].sum()) == int(u.edges[b])
+    # group storages and unified storage agree on per-block edge counts
+    grouped = np.concatenate([plan.hot.edges, plan.cold.edges])
+    assert np.array_equal(grouped, u.edges)
 
 
 def test_block_bytes_positive(core_periphery_small):
