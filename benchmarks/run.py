@@ -13,21 +13,27 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=20000,
                     help="graph size for the engine benchmarks")
     ap.add_argument("--only", default=None,
-                    help="comma list: runtime,convergence,io,kernels")
+                    help="comma list: runtime,convergence,io,kernels,"
+                         "streaming")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_runtime.json (suite, name, "
                          "us_per_call) next to the CSV output")
     args = ap.parse_args()
 
     from benchmarks import (bench_convergence, bench_io, bench_kernels,
-                            bench_runtime)
+                            bench_runtime, bench_streaming)
     suites = {
         "runtime": lambda: bench_runtime.run(args.n),
         "convergence": lambda: bench_convergence.run(args.n),
         "io": lambda: bench_io.run(args.n),
         "kernels": bench_kernels.run,
+        "streaming": lambda: bench_streaming.run(args.n),
     }
     pick = args.only.split(",") if args.only else list(suites)
+    if args.json and "io" not in pick:
+        # the bytes-loaded trajectory is tracked across PRs: a JSON payload
+        # without the I/O table rows silently drops it
+        pick.append("io")
     print("name,us_per_call,derived")
     ok = True
     records = []
@@ -41,6 +47,10 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             ok = False
             print(f"{key},-1,ERROR:{e!r}")
+            # keep the failure in-band in the JSON payload too: a suite's
+            # rows silently vanishing would read as a perf change
+            records.append({"suite": key, "name": key, "us_per_call": -1,
+                            "derived": f"ERROR:{e!r}"})
             continue
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,66 @@
+"""Streaming demo: a long-lived engine serving edge deltas beats rerunning
+a batch job per snapshot.
+
+A core-periphery graph (the paper's convergence-skew regime) converges
+once, then a synthetic delta stream — preferential-attachment inserts,
+random unfollows, the occasional celebrity burst — is ingested batch by
+batch. Each batch re-heats only the dirty blocks and reconverges from the
+previous fixpoint inside the already-compiled fused superstep; the cold
+column reruns the full convergence from scratch on the same mutated graph.
+
+    PYTHONPATH=src python examples/streaming_graph.py [--n 10000]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core.engine import EngineConfig
+from repro.stream import StreamConfig, StreamingEngine, synthetic_stream
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10000)
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=150)
+    args = ap.parse_args()
+
+    g = G.core_periphery_graph(args.n, avg_deg=8, seed=1, chords=1,
+                               weighted=True)
+    cfg = EngineConfig(t2=1e-8, width=16, block_size=512)
+    prog = A.pagerank()
+
+    warm = StreamingEngine(g, prog, cfg)
+    cold = StreamingEngine(g, prog, cfg, StreamConfig(warm=False))
+    print(f"initial convergence: {warm.initial_result.metrics.iterations} "
+          f"iterations, {warm.initial_result.metrics.edges_processed} edges")
+
+    batches = synthetic_stream(g, args.batches, args.batch_size, seed=3,
+                               delete_frac=0.2, weighted=True)
+    print(f"\n{'batch':>5s} {'+ins':>5s} {'-del':>5s} {'dirty':>9s} "
+          f"{'warm edges':>11s} {'cold edges':>11s} {'warm ms':>8s} "
+          f"{'cold ms':>8s}")
+    for i, b in enumerate(batches):
+        rw = warm.ingest(b)
+        rc = cold.ingest(b)
+        print(f"{i:5d} {rw.inserts:5d} {rw.deletes:5d} "
+              f"{rw.dirty_blocks:3d}/{rw.num_blocks:<3d}   "
+              f"{rw.edges_processed:11d} {rc.edges_processed:11d} "
+              f"{rw.latency_s * 1e3:8.1f} {rc.latency_s * 1e3:8.1f}")
+
+    assert np.allclose(warm.values, cold.values, rtol=1e-3, atol=1e-5), \
+        "warm and cold disagree!"
+    mw, mc = warm.metrics, cold.metrics
+    print(f"\nwarm vs cold over {mw.batches} batches: "
+          f"{mc.edges_reprocessed / max(mw.edges_reprocessed, 1):.2f}x fewer "
+          f"edges reprocessed, "
+          f"{mc.latency_per_batch_s / max(mw.latency_per_batch_s, 1e-9):.2f}x "
+          f"faster per batch, mean dirty fraction {mw.dirty_frac:.2f} "
+          f"({mw.appended_blocks} in-place appends, {mw.rebuilt_blocks} "
+          f"block rebuilds, {mw.plan_rebuilds} plan rebuilds)")
+
+
+if __name__ == "__main__":
+    main()

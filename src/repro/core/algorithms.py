@@ -35,11 +35,74 @@ class VertexProgram:
     apply: Callable[[Array, Array, int], Array] = None
     # sd_delta(old_block, new_block) -> nonnegative activity contribution
     sd_delta: Callable[[Array, Array], Array] = None
+    # -- streaming hooks (repro.stream) -------------------------------------
+    # aux_fn(out_deg, in_deg) -> aux: recompute the per-vertex constant from
+    # incrementally-maintained degrees after an edge delta. None => aux is
+    # degree-independent and survives mutation unchanged.
+    aux_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None
+    # reset_on_delete(g_new, values, del_src, del_dst, del_w) -> bool mask of
+    # vertices whose values must be re-initialised before a warm re-start.
+    # Needed for min/max programs: apply() can only improve a value, so a
+    # deletion that breaks the supporting path would otherwise leave a stale
+    # (too-good) value the iteration can never take back. None => the
+    # program reconverges from any warm state (e.g. PageRank, whose apply
+    # ignores the old value entirely).
+    reset_on_delete: Callable[..., np.ndarray] | None = None
 
     @property
     def identity(self) -> np.float32:
         return {"sum": np.float32(0.0), "min": INF,
                 "max": np.float32(-INF)}[self.combine]
+
+
+def _invalidated_by_delete(g: Graph, dist: np.ndarray, dsrc: np.ndarray,
+                           ddst: np.ndarray, dw: np.ndarray,
+                           unit: bool = False) -> np.ndarray:
+    """KickStarter-style delete trimming for min-combine distance programs:
+    the set of vertices whose current distance may (transitively) depend on
+    a deleted edge. Seeds are deletion heads whose old distance was achieved
+    through the deleted copy; the set closes forward over edges of the NEW
+    graph that were tight under the old distances. Over-approximate (a tie
+    with an intact support still counts as dependent) — sound: every
+    truly-unsupported vertex is included, extras just get recomputed. All
+    vertices outside the mask keep distances that are still achieved by an
+    intact path, so a warm min-combine re-run reconverges exactly."""
+    d64 = np.asarray(dist, dtype=np.float64)
+    dw = (np.ones(len(ddst)) if unit
+          else np.asarray(dw, dtype=np.float64))
+    reach = d64 < float(INF) / 2.0
+
+    def tight(a, b, wab):  # b's value was (one of) a's relaxations
+        return reach[a] & np.isclose(d64[b], d64[a] + wab,
+                                     rtol=1e-5, atol=1e-4)
+
+    mask = np.zeros(g.n, dtype=bool)
+    dsrc = np.asarray(dsrc, dtype=np.int64)
+    ddst = np.asarray(ddst, dtype=np.int64)
+    mask[ddst[tight(dsrc, ddst, dw)]] = True
+    if not mask.any():
+        return mask
+    # frontier-wise closure over the CSR out-edges of newly-masked vertices
+    # only: each vertex enters the frontier at most once, so the total work
+    # is O(m + n), not O(depth * m) (a deleted chain head would otherwise
+    # rescan the whole edge set once per hop).
+    indptr, out_dst, out_w = g.out_indptr, g.out_dst, g.out_w
+    frontier = np.flatnonzero(mask)
+    while frontier.size:
+        starts, ends = indptr[frontier], indptr[frontier + 1]
+        cnt = ends - starts
+        total = int(cnt.sum())
+        if total == 0:
+            break
+        eidx = (np.repeat(starts - np.concatenate(
+            [[0], np.cumsum(cnt)[:-1]]), cnt) + np.arange(total))
+        srcs = np.repeat(frontier, cnt)
+        dsts = out_dst[eidx].astype(np.int64)
+        ws = (np.ones(total) if unit else out_w[eidx].astype(np.float64))
+        hit = tight(srcs, dsts, ws) & ~mask[dsts]
+        frontier = np.unique(dsts[hit])
+        mask[frontier] = True
+    return mask
 
 
 def pagerank(damping: float = 0.85) -> VertexProgram:
@@ -59,9 +122,14 @@ def pagerank(damping: float = 0.85) -> VertexProgram:
     def sd_delta(old, new):  # Eq. 3
         return jnp.abs(new - old)
 
+    def aux_fn(out_deg, in_deg):
+        del in_deg
+        return np.maximum(out_deg, 1).astype(np.float32)
+
     return VertexProgram(name="pagerank", combine="sum", needs_symmetric=False,
                          monotone_cooling=True, damping=damping, init=init,
-                         edge_map=edge_map, apply=apply, sd_delta=sd_delta)
+                         edge_map=edge_map, apply=apply, sd_delta=sd_delta,
+                         aux_fn=aux_fn)
 
 
 def sssp(source: int = 0) -> VertexProgram:
@@ -81,9 +149,13 @@ def sssp(source: int = 0) -> VertexProgram:
     def sd_delta(old, new):  # Eq. 4: min of the two results, on change
         return jnp.where(new < old, jnp.minimum(new, old), 0.0)
 
+    def reset_on_delete(g, values, dsrc, ddst, dw):
+        return _invalidated_by_delete(g, values, dsrc, ddst, dw, unit=False)
+
     return VertexProgram(name="sssp", combine="min", needs_symmetric=False,
                          monotone_cooling=False, init=init, edge_map=edge_map,
-                         apply=apply, sd_delta=sd_delta)
+                         apply=apply, sd_delta=sd_delta,
+                         reset_on_delete=reset_on_delete)
 
 
 def bfs(source: int = 0) -> VertexProgram:
@@ -103,9 +175,13 @@ def bfs(source: int = 0) -> VertexProgram:
     def sd_delta(old, new):
         return jnp.where(new < old, 1.0, 0.0)
 
+    def reset_on_delete(g, values, dsrc, ddst, dw):
+        return _invalidated_by_delete(g, values, dsrc, ddst, dw, unit=True)
+
     return VertexProgram(name="bfs", combine="min", needs_symmetric=False,
                          monotone_cooling=False, init=init, edge_map=edge_map,
-                         apply=apply, sd_delta=sd_delta)
+                         apply=apply, sd_delta=sd_delta,
+                         reset_on_delete=reset_on_delete)
 
 
 def cc() -> VertexProgram:
@@ -126,9 +202,20 @@ def cc() -> VertexProgram:
     def sd_delta(old, new):  # the larger of the two results, on change
         return jnp.where(new > old, jnp.maximum(new, old), 0.0)
 
+    def reset_on_delete(g, values, dsrc, ddst, dw):
+        # a deletion can split the component both endpoints sit in: re-flood
+        # every vertex carrying that component's label from its own id.
+        # Other components are untouched (labels never cross components).
+        del g, dw
+        labels = np.unique(np.concatenate(
+            [np.asarray(values)[np.asarray(dsrc, dtype=np.int64)],
+             np.asarray(values)[np.asarray(ddst, dtype=np.int64)]]))
+        return np.isin(np.asarray(values), labels)
+
     return VertexProgram(name="cc", combine="max", needs_symmetric=True,
                          monotone_cooling=False, init=init, edge_map=edge_map,
-                         apply=apply, sd_delta=sd_delta)
+                         apply=apply, sd_delta=sd_delta,
+                         reset_on_delete=reset_on_delete)
 
 
 REGISTRY: dict[str, Callable[..., VertexProgram]] = {

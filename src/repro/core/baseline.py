@@ -21,9 +21,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.algorithms import VertexProgram
-from repro.core.engine import EngineConfig, RunResult, make_tiled_processor
+from repro.core.engine import (EngineConfig, RunResult, edge_data,
+                               make_tiled_processor)
 from repro.core.graph import Graph, symmetrize
-from repro.core.metrics import Metrics, Timer
+from repro.core.metrics import Metrics, Timer, block_io_bytes
 from repro.core.partition import build_tiled_storage
 
 
@@ -51,6 +52,7 @@ class BaselineEngine:
             [vals0, np.zeros(pad, dtype=vals0.dtype)]) if pad else vals0)
         self.aux = jnp.asarray(aux0)
         self.out_deg_np = g.out_deg
+        self._ed = edge_data(self.store, self.aux)
         self._step = jax.jit(self._make_step())
 
     def _make_step(self):
@@ -58,16 +60,15 @@ class BaselineEngine:
         c = self.config.block_size
         nb = self.num_blocks
         process_one, _, _ = make_tiled_processor(
-            program, self.store, self.aux, c, g.n, g.n,
-            self.config.use_pallas)
+            program, self.store, c, g.n, g.n, self.config.use_pallas)
         rows = jnp.arange(nb, dtype=jnp.int32)
 
-        def step(values):
+        def step(ed, values):
             # lax.map, not vmap: batched tile loops run in lockstep until
             # the LAST lane finishes, so vmap would make every block pay the
             # largest block's tile count; mapped blocks pay their own.
             _, news, psd, _ = jax.lax.map(
-                lambda r: process_one(values, r), rows)
+                lambda r: process_one(ed, values, r), rows)
             new = news.reshape(nb * c)
             delta = program.sd_delta(values, new)
             changed = (delta > 0)
@@ -88,7 +89,7 @@ class BaselineEngine:
         with Timer() as t:
             it = 0
             while it < max_it:
-                values, psd, nchanged = self._step(values)
+                values, psd, nchanged = self._step(self._ed, values)
                 psd_host = np.asarray(psd)
                 metrics.updates += self.graph.n
                 metrics.edges_processed += self.graph.m
@@ -116,12 +117,12 @@ class BaselineEngine:
                          metrics=metrics, history=history)
 
     def _bytes_per_block(self) -> np.ndarray:
-        """Edges per id-order block via indptr differences; same 12B/edge +
-        4B/vertex cost model as PartitionPlan.block_bytes."""
+        """Edges per id-order block via indptr differences; shared cost
+        model (metrics.block_io_bytes) with the structure-aware engine."""
         c = self.config.block_size
         idx = np.arange(0, self.graph.n, c)
         idx = np.append(idx, self.graph.n)
         edges = np.diff(self.graph.in_indptr[idx])
         if edges.size < self.num_blocks:
             edges = np.pad(edges, (0, self.num_blocks - edges.size))
-        return edges[:self.num_blocks] * 12 + c * 4
+        return block_io_bytes(edges[:self.num_blocks], c)

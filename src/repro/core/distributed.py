@@ -65,13 +65,17 @@ class DistributedEngine(StructureAwareEngine):
         super().__init__(graph, program, config)
 
     def run(self, max_iterations: int | None = None,
-            fused: bool | None = None):
+            fused: bool | None = None, warm=None):
         """shard_map dispatch is host-driven; the single-device fused chunk
-        would silently ignore the mesh, so asking for it is an error."""
+        would silently ignore the mesh, so asking for it is an error (and
+        warm streaming restarts are not distributed yet)."""
         if fused:
             raise ValueError(
                 "DistributedEngine does not support the fused loop: "
                 "dispatch is routed through shard_map per host call")
+        if warm is not None:
+            raise ValueError(
+                "DistributedEngine does not support warm restarts yet")
         return super().run(max_iterations, fused=False)
 
     def _get_fn(self, store_key: str, sequential: bool):

@@ -30,6 +30,19 @@ paper targets. The reference host-driven loop is kept as
 ``run(fused=False)`` (per-iteration history, and the base for the
 shard_map distributed engine).
 
+Dynamic edge state (streaming support). The tiled edge arrays, the
+per-vertex aux, and the staleness-coupling matrix are **traced arguments**
+of every jitted function (:class:`EdgeData`), not closure constants: the
+compiled superstep is keyed only on the tile GEOMETRY (tile_start /
+tile_cnt / shapes), so the streaming subsystem can mutate edges in place
+and re-enter the same executable — a closure-captured array would bake the
+edge list into the XLA program and force a recompile per delta batch.
+``run(warm=WarmStart(...))`` re-enters convergence from an
+already-converged state with only the dirty blocks re-heated (PSD =
+UNSEEN, labelled hot); clean blocks start individually converged and
+re-arm through the staleness coupling — the universal repartitioner's
+cold->hot path (§3.3), applied to graph mutation instead of in-run decay.
+
 Correctness beyond the paper's prose: partial scheduling needs a staleness
 signal — when block j's vertices change, downstream blocks (containing j's
 out-neighbours) must become schedulable again even if their own PSD already
@@ -42,8 +55,7 @@ synchronous baseline (tested property), fused or host-driven.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +65,7 @@ from jax import lax
 from repro.core import state as state_lib
 from repro.core.algorithms import VertexProgram
 from repro.core.graph import Graph, symmetrize
-from repro.core.metrics import Metrics, Timer
+from repro.core.metrics import Metrics, Timer, block_io_bytes
 from repro.core.partition import (EdgeStorage, PartitionPlan, TiledStorage,
                                   build_plan)
 from repro.core.repartition import RepartitionState
@@ -77,6 +89,9 @@ class EngineConfig:
     stale_eps: float = 1e-12  # PSD above this marks downstream blocks dirty
     use_pallas: bool = False  # sum-combine via the Pallas spmv kernel
     fused: bool = True  # device-resident lax.while_loop superstep
+    tile_slack: float = 0.0  # spare tile capacity per block (streaming)
+    spare_tiles: int = 0  # flat extra tiles per block (streaming)
+    keep_dead_blocks: bool = False  # dead vertices get block slots (streaming)
     seed: int = 0
 
 
@@ -85,6 +100,42 @@ class RunResult:
     values: np.ndarray  # indexed by ORIGINAL vertex id
     metrics: Metrics
     history: list  # per-iteration dicts (for convergence curves)
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmStart:
+    """Re-enter convergence from a previous fixpoint (streaming re-heat).
+
+    ``values`` is in PERMUTED order, padded to the engine's value length;
+    ``psd`` carries UNSEEN for dirty blocks / 0 for clean ones (see
+    ``state.warm_psd``); ``is_hot`` is the dirty mask — warm runs always
+    repartition in universal mode, since an arbitrary dirty set is not a
+    prefix barrier.
+    """
+
+    values: np.ndarray
+    psd: np.ndarray
+    is_hot: np.ndarray
+
+
+class EdgeData(NamedTuple):
+    """Device-resident dynamic state of the tiled layout — everything a
+    delta batch can change without changing tile geometry. Passed as a
+    traced argument to every jitted engine function (NOT closed over), so
+    in-place streaming mutation re-uses the compiled executable."""
+
+    src: jax.Array  # (n_tiles, TILE) int32
+    dstl: jax.Array  # (n_tiles, TILE) int32
+    w: jax.Array  # (n_tiles, TILE) float32
+    valid: jax.Array  # (n_tiles, TILE) bool
+    aux: jax.Array  # (n,) float32 per-vertex constant (e.g. out-degree)
+
+
+def edge_data(store: TiledStorage, aux) -> EdgeData:
+    return EdgeData(src=jnp.asarray(store.src),
+                    dstl=jnp.asarray(store.dst_local),
+                    w=jnp.asarray(store.w), valid=jnp.asarray(store.valid),
+                    aux=jnp.asarray(aux))
 
 
 def _combine_local(program: VertexProgram, msg, dst_local, block_size,
@@ -151,19 +202,15 @@ def make_block_processor(program: VertexProgram, store: EdgeStorage, aux,
     return process_one, process_iterated, gids
 
 
-def make_tiled_processor(program: VertexProgram, store: TiledStorage, aux,
+def make_tiled_processor(program: VertexProgram, store: TiledStorage,
                          block_size: int, n_live: int, n_total: int,
                          use_pallas: bool):
-    """Block processor over the unified tiled layout: same
-    (process_one, process_iterated, gids) contract as
-    :func:`make_block_processor`, but ``row`` is the GLOBAL block id and the
-    per-block work is a fori over that block's tile rows, so compute scales
-    with the block's true edge count rather than a shared padded capacity.
-    """
-    src = jnp.asarray(store.src)
-    dstl = jnp.asarray(store.dst_local)
-    ew = jnp.asarray(store.w)
-    evalid = jnp.asarray(store.valid)
+    """Block processor over the unified tiled layout: ``row`` is the GLOBAL
+    block id and the per-block work is a fori over that block's tile rows,
+    so compute scales with the block's true edge count rather than a shared
+    padded capacity. Only the tile GEOMETRY (tile_start/tile_cnt) is closed
+    over; the edge arrays and aux arrive per call as an :class:`EdgeData`,
+    so streaming mutations never invalidate the trace."""
     tile_start = jnp.asarray(store.tile_start, dtype=jnp.int32)
     tile_cnt = jnp.asarray(store.tile_cnt, dtype=jnp.int32)
     gids = jnp.arange(store.num_blocks, dtype=jnp.int32)
@@ -179,16 +226,17 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage, aux,
         agg0 = jnp.full(c, program.identity)
         merge = jnp.maximum
 
-    def process_one(values, row):
+    def process_one(ed: EdgeData, values, row):
         t0 = tile_start[row]
 
         def tile_body(t, agg):
             r = t0 + t
-            e_src = src[r]
-            msg = program.edge_map(values[e_src], aux[e_src], ew[r])
-            msg = jnp.where(evalid[r], msg, program.identity)
+            e_src = ed.src[r]
+            msg = program.edge_map(values[e_src], ed.aux[e_src], ed.w[r])
+            msg = jnp.where(ed.valid[r], msg, program.identity)
             return merge(agg,
-                         _combine_local(program, msg, dstl[r], c, use_pallas))
+                         _combine_local(program, msg, ed.dstl[r], c,
+                                        use_pallas))
 
         agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
         base = row * c
@@ -200,14 +248,14 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage, aux,
         cnt = jnp.maximum(vmask.sum(), 1)
         return base, new, delta.sum() / cnt, delta.max()
 
-    def process_iterated(values, row, t_inner):
+    def process_iterated(ed: EdgeData, values, row, t_inner):
         """Asynchronous hot mode (see make_block_processor): t_inner
         block-local Gauss-Seidel passes per partition load."""
         base = row * c
         old = lax.dynamic_slice(values, (base,), (c,))
 
         def inner(_, vals):
-            _, new, _, _ = process_one(vals, row)
+            _, new, _, _ = process_one(ed, vals, row)
             return lax.dynamic_update_slice(vals, new, (base,))
 
         vals2 = lax.fori_loop(0, t_inner, inner, values)
@@ -231,7 +279,9 @@ class StructureAwareEngine:
         self.plan = build_plan(
             g, block_size=config.block_size, alpha=config.alpha,
             sample_frac=config.sample_frac, hot_ratio=config.hot_ratio,
-            seed=config.seed)
+            seed=config.seed, tile_slack=config.tile_slack,
+            spare_tiles=config.spare_tiles,
+            keep_dead=config.keep_dead_blocks)
         vals0, aux0 = program.init(g)  # original ids ...
         self.values0 = vals0[self.plan.order]  # ... permuted to plan order
         self.aux = jnp.asarray(aux0[self.plan.order])
@@ -241,12 +291,14 @@ class StructureAwareEngine:
         # silently corrupt the last block's writes.
         p = self.plan
         self._values_len = max(p.num_blocks * p.block_size, p.graph.n)
-        pad = self._values_len - p.graph.n
-        if pad:
-            self.values0 = np.concatenate(
-                [self.values0, np.zeros(pad, dtype=self.values0.dtype)])
+        self.values0 = self.pad_values(self.values0)
+        # Per-block true edge counts: a MUTABLE copy (streaming updates it);
+        # feeds the exact metric accounting and the bytes cost model.
+        self.edge_counts = np.array(p.unified.edges, dtype=np.int64)
+        self._ed = edge_data(p.unified, self.aux)
         self._block_affects = self._build_block_affects()
         self._coupling = self._build_coupling_matrix()
+        self._coupling_dev = jnp.asarray(self._coupling)
         self._post = jax.jit(self._make_post())
         self._fns: dict = {}
 
@@ -277,7 +329,6 @@ class StructureAwareEngine:
         p = self.plan
         g = p.graph
         c = p.block_size
-        mass_like = self.program.combine == "sum"
         out: list[tuple[np.ndarray, np.ndarray]] = []
         for b in range(p.num_blocks):
             lo, hi = p.block_range(b)
@@ -285,30 +336,26 @@ class StructureAwareEngine:
             blocks, counts = np.unique(dsts // c, return_counts=True)
             keep = blocks < p.num_blocks
             blocks, counts = blocks[keep], counts[keep]
-            if mass_like:
-                wts = (np.minimum(counts, c) / c).astype(np.float32)
-            else:
-                wts = np.ones(blocks.size, dtype=np.float32)
-            out.append((blocks.astype(np.int64), wts))
+            out.append((blocks.astype(np.int64), counts.astype(np.int64)))
         return out
 
     def _build_coupling_matrix(self) -> np.ndarray:
         """Dense (P, P) staleness-coupling matrix (decay folded in): the
         device-side bump is the max-product matvec
-        ``bump_b = max_j dmax_j * K[j, b]``."""
+        ``bump_b = max_j dmax_j * K[j, b]``. The underlying block->block
+        edge-count matrix is kept as ``self.coupling_counts`` — the truth
+        the streaming subsystem maintains incrementally."""
         p = self.plan
-        decay = (self.program.damping if self.program.combine == "sum"
-                 else 1.0)
-        k = np.zeros((p.num_blocks, p.num_blocks), dtype=np.float32)
-        for j, (tgt, wts) in enumerate(self._block_affects):
-            k[j, tgt] = wts * decay
-        return k
+        w = np.zeros((p.num_blocks, p.num_blocks), dtype=np.int64)
+        for j, (tgt, counts) in enumerate(self._block_affects):
+            w[j, tgt] = counts
+        self.coupling_counts = w
+        return coupling_from_counts(w, self.program, p.block_size)
 
     def _make_post(self):
-        coupling = jnp.asarray(self._coupling)
         eps = self.config.stale_eps
 
-        def post(psd, dmax):
+        def post(coupling, psd, dmax):
             """Consume dmax: re-arm downstream blocks, then reset."""
             d = jnp.where(dmax > eps, dmax, 0.0)
             bump = jnp.max(d[:, None] * coupling, axis=0)
@@ -321,49 +368,89 @@ class StructureAwareEngine:
         a block: [vertices updated, edges processed, 1 load, bytes loaded].
         The device only counts schedules per block (small exact int32s);
         the host multiplies through this table at flush time, so metric
-        totals stay exact at any scale."""
+        totals stay exact at any scale. Uses the live ``edge_counts``, not
+        the plan snapshot, so warm streaming runs bill mutated blocks at
+        their current size."""
         p = self.plan
         acct = np.zeros((p.num_blocks, 4), dtype=np.int64)
         for b in range(p.num_blocks):
             lo, hi = p.block_range(b)
-            acct[b] = (hi - lo, int(p.unified.edges[b]), 1,
-                       p.block_bytes(b))
+            e = int(self.edge_counts[b])
+            acct[b] = (hi - lo, e, 1, block_io_bytes(e, p.block_size))
         return acct
+
+    # -- streaming hooks -----------------------------------------------------
+    def set_edge_data(self, *, src=None, dst_local=None, w=None, valid=None,
+                      aux=None) -> None:
+        """Swap (parts of) the device-resident dynamic edge state. Shapes
+        must match the compiled epoch — a geometry change needs a new
+        engine, not new arrays."""
+        ed = self._ed
+        new = EdgeData(
+            src=jnp.asarray(src, jnp.int32) if src is not None else ed.src,
+            dstl=(jnp.asarray(dst_local, jnp.int32)
+                  if dst_local is not None else ed.dstl),
+            w=jnp.asarray(w, jnp.float32) if w is not None else ed.w,
+            valid=(jnp.asarray(valid, bool) if valid is not None
+                   else ed.valid),
+            aux=jnp.asarray(aux, jnp.float32) if aux is not None else ed.aux)
+        for name in EdgeData._fields:
+            if getattr(new, name).shape != getattr(ed, name).shape:
+                raise ValueError(
+                    f"EdgeData.{name} shape {getattr(new, name).shape} != "
+                    f"compiled epoch shape {getattr(ed, name).shape}")
+        self._ed = new
+        if aux is not None:
+            self.aux = new.aux
+
+    def set_coupling(self, coupling: np.ndarray) -> None:
+        if coupling.shape != self._coupling.shape:
+            raise ValueError("coupling shape changed within an epoch")
+        self._coupling = np.asarray(coupling, dtype=np.float32)
+        self._coupling_dev = jnp.asarray(self._coupling)
+
+    def pad_values(self, values_perm: np.ndarray) -> np.ndarray:
+        """Pad a permuted (n,) value vector to the engine's value length."""
+        pad = self._values_len - values_perm.shape[0]
+        if pad:
+            return np.concatenate(
+                [values_perm, np.zeros(pad, dtype=values_perm.dtype)])
+        return values_perm
 
     # -- jitted block processing -------------------------------------------
     def _processor(self):
         if getattr(self, "_proc", None) is None:
             plan, cfg = self.plan, self.config
             self._proc = make_tiled_processor(
-                self.program, plan.unified, self.aux, plan.block_size,
+                self.program, plan.unified, plan.block_size,
                 plan.n_live, plan.graph.n, cfg.use_pallas)
         return self._proc
 
     def _sweeps(self):
         """(hot_sweep, cold_sweep): the two dispatch bodies, shared at trace
         time by the host-loop fns and the fused superstep so the semantics
-        cannot diverge. Both take (values, psd, dmax, rows, ok) with (W,)
-        block-id slots; hot is sequential (async, each block sees earlier
-        writes), cold reads one snapshot (sync)."""
+        cannot diverge. Both take (ed, values, psd, dmax, rows, ok) with
+        (W,) block-id slots; hot is sequential (async, each block sees
+        earlier writes), cold reads one snapshot (sync)."""
         cfg, plan = self.config, self.plan
         width = cfg.width
         t_inner = max(cfg.hot_inner_iters, 1)
         process_one, process_iterated, gids = self._processor()
         write_one = self._write_one(plan.block_size)
 
-        def hot_sweep(values, psd, dmax, rows, ok):
+        def hot_sweep(ed, values, psd, dmax, rows, ok):
             def body(i, carry):
                 values, psd, dmax = carry
                 row = rows[i]
                 base, new, psd_val, dmax_val = process_iterated(
-                    values, row, t_inner)
+                    ed, values, row, t_inner)
                 return write_one(values, psd, dmax, base, new, psd_val,
                                  dmax_val, gids[row], ok[i])
             return lax.fori_loop(0, width, body, (values, psd, dmax))
 
-        def cold_sweep(values, psd, dmax, rows, ok):
+        def cold_sweep(ed, values, psd, dmax, rows, ok):
             bases, news, psd_vals, dmax_vals = jax.vmap(
-                lambda r: process_one(values, r))(rows)
+                lambda r: process_one(ed, values, r))(rows)
 
             def body(i, carry):
                 values, psd, dmax = carry
@@ -392,7 +479,7 @@ class StructureAwareEngine:
             return self._fns[key]
         hot_sweep, cold_sweep = self._sweeps()
         fn = jax.jit(hot_sweep if sequential else cold_sweep,
-                     donate_argnums=(0, 1, 2))
+                     donate_argnums=(1, 2, 3))
         self._fns[key] = fn
         return fn
 
@@ -408,18 +495,19 @@ class StructureAwareEngine:
             rows[:chunk.size] = chunk.astype(np.int32)
             ok[:chunk.size] = True
             fn = self._get_fn(sequential)
-            values, psd, dmax = fn(values, psd, dmax, jnp.asarray(rows),
-                                   jnp.asarray(ok))
+            values, psd, dmax = fn(self._ed, values, psd, dmax,
+                                   jnp.asarray(rows), jnp.asarray(ok))
         return values, psd, dmax
 
     def _account(self, metrics: Metrics, ids: np.ndarray):
         p = self.plan
         for b in ids:
             lo, hi = p.block_range(int(b))
+            e = int(self.edge_counts[int(b)])
             metrics.updates += hi - lo
             metrics.block_loads += 1
-            metrics.bytes_loaded += p.block_bytes(int(b))
-            metrics.edges_processed += int(p.unified.edges[int(b)])
+            metrics.bytes_loaded += block_io_bytes(e, p.block_size)
+            metrics.edges_processed += e
 
     # -- fused device-resident loop -----------------------------------------
     def _get_chunk(self) -> Callable:
@@ -441,19 +529,20 @@ class StructureAwareEngine:
             min_psd=cfg.t2 / max(plan.num_blocks, 1),
             pad_id=int(np.argmin(tile_cnt)) if tile_cnt.size else 0)
 
-        def superstep(it, values, psd, dmax, counts, is_hot):
+        def superstep(it, ed, coupling, values, psd, dmax, counts, is_hot):
             hot_rows, hot_ok, cold_rows, cold_ok = select(it, psd, is_hot)
-            values, psd, dmax = hot_sweep(values, psd, dmax, hot_rows,
+            values, psd, dmax = hot_sweep(ed, values, psd, dmax, hot_rows,
                                           hot_ok)
-            values, psd, dmax = cold_sweep(values, psd, dmax, cold_rows,
+            values, psd, dmax = cold_sweep(ed, values, psd, dmax, cold_rows,
                                            cold_ok)
             counts = counts.at[hot_rows].add(hot_ok.astype(jnp.int32))
             counts = counts.at[cold_rows].add(cold_ok.astype(jnp.int32))
-            psd, dmax = post(psd, dmax)  # staleness propagation
+            psd, dmax = post(coupling, psd, dmax)  # staleness propagation
             scheduled = hot_ok.any() | cold_ok.any()
             return values, psd, dmax, counts, scheduled
 
-        def chunk(values, psd, dmax, counts, it0, it_end, is_hot):
+        def chunk(ed, coupling, values, psd, dmax, counts, it0, it_end,
+                  is_hot):
             def cond(carry):
                 it, _, _, _, _, done = carry
                 return (it < it_end) & jnp.logical_not(done)
@@ -461,7 +550,7 @@ class StructureAwareEngine:
             def body(carry):
                 it, values, psd, dmax, counts, _ = carry
                 values, psd, dmax, counts, scheduled = superstep(
-                    it, values, psd, dmax, counts, is_hot)
+                    it, ed, coupling, values, psd, dmax, counts, is_hot)
                 conv = state_lib.converged_device(psd, t2)
                 # empty schedule: no iteration happened (host parity: the
                 # reference loop breaks before processing)
@@ -475,33 +564,51 @@ class StructureAwareEngine:
             return (it, values, psd, dmax, counts,
                     state_lib.converged_device(psd, t2))
 
-        fn = jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
+        fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5))
         self._fns["chunk"] = fn
         return fn
 
     # -- main loop ----------------------------------------------------------
     def run(self, max_iterations: int | None = None,
-            fused: bool | None = None) -> RunResult:
+            fused: bool | None = None,
+            warm: WarmStart | None = None) -> RunResult:
         """Run to convergence. ``fused`` overrides ``config.fused``:
         True = device-resident chunked loop (host syncs only at repartition
         boundaries), False = reference host-driven loop (one sync per
-        iteration, per-iteration history)."""
+        iteration, per-iteration history). ``warm`` re-enters from a
+        previous fixpoint with only the dirty blocks re-heated."""
         fused = self.config.fused if fused is None else fused
         if fused:
-            return self._run_fused(max_iterations)
-        return self._run_host(max_iterations)
+            return self._run_fused(max_iterations, warm)
+        return self._run_host(max_iterations, warm)
 
-    def _run_fused(self, max_iterations: int | None = None) -> RunResult:
+    def _start_state(self, warm: WarmStart | None):
+        cfg, p = self.config, self.plan
+        if warm is None:
+            mode = ("barrier" if self.program.monotone_cooling
+                    else "universal")
+            rep = RepartitionState.create(
+                p.num_blocks, p.barrier_block, mode,
+                interval=cfg.repartition_interval,
+                growth=cfg.repartition_growth)
+            return (jnp.asarray(self.values0),
+                    jnp.asarray(state_lib.init_psd(p.num_blocks)), rep)
+        if warm.values.shape[0] != self._values_len:
+            raise ValueError("warm values must be permuted + padded "
+                             f"({warm.values.shape[0]} != {self._values_len})")
+        rep = RepartitionState.warm(
+            warm.is_hot, interval=cfg.repartition_interval,
+            growth=cfg.repartition_growth)
+        return (jnp.asarray(np.asarray(warm.values, dtype=np.float32)),
+                jnp.asarray(np.asarray(warm.psd, dtype=np.float32)), rep)
+
+    def _run_fused(self, max_iterations: int | None = None,
+                   warm: WarmStart | None = None) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
-        mode = "barrier" if self.program.monotone_cooling else "universal"
-        rep = RepartitionState.create(
-            p.num_blocks, p.barrier_block, mode,
-            interval=cfg.repartition_interval, growth=cfg.repartition_growth)
         chunk = self._get_chunk()
 
-        values = jnp.asarray(self.values0)
-        psd = jnp.asarray(state_lib.init_psd(p.num_blocks))
+        values, psd, rep = self._start_state(warm)
         dmax = jnp.zeros(p.num_blocks, jnp.float32)
         acct = self._acct_table()
         metrics = Metrics()
@@ -515,7 +622,7 @@ class StructureAwareEngine:
                 # int32s, zeroed each chunk); the host expands them through
                 # the int64 accounting table at the boundary
                 it_dev, values, psd, dmax, counts, conv = chunk(
-                    values, psd, dmax,
+                    self._ed, self._coupling_dev, values, psd, dmax,
                     jnp.zeros(p.num_blocks, jnp.int32),
                     jnp.int32(it), jnp.int32(it_end),
                     jnp.asarray(rep.is_hot))
@@ -532,7 +639,7 @@ class StructureAwareEngine:
                                               state_lib.UNSEEN].sum()),
                     "unseen": int((psd_host >= state_lib.UNSEEN).sum()),
                     "hot_blocks": int(rep.is_hot.sum()),
-                    "scheduled": int(round(float(delta[2]))),  # block loads
+                    "scheduled": int(delta[2]),  # block loads
                 })
                 if bool(conv):
                     metrics.converged = True
@@ -547,20 +654,16 @@ class StructureAwareEngine:
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 
-    def _run_host(self, max_iterations: int | None = None) -> RunResult:
+    def _run_host(self, max_iterations: int | None = None,
+                  warm: WarmStart | None = None) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
-        mode = "barrier" if self.program.monotone_cooling else "universal"
-        rep = RepartitionState.create(
-            p.num_blocks, p.barrier_block, mode,
-            interval=cfg.repartition_interval, growth=cfg.repartition_growth)
         # Per-block pruning floor: skipping blocks below t2/P is safe — if
         # every block were below it, SUM(psd) < t2 and we are converged.
         sched = Scheduler(width=cfg.width, i2=cfg.i2, cold_frac=cfg.cold_frac,
                           min_psd=cfg.t2 / max(p.num_blocks, 1))
 
-        values = jnp.asarray(self.values0)
-        psd = jnp.asarray(state_lib.init_psd(p.num_blocks))
+        values, psd, rep = self._start_state(warm)
         dmax = jnp.zeros(p.num_blocks, jnp.float32)
         psd_host = np.asarray(psd)
         metrics = Metrics()
@@ -581,7 +684,7 @@ class StructureAwareEngine:
                 # staleness propagation (device-side max-product matvec):
                 # a max per-vertex delta v in block j can move block b's
                 # mean-PSD by at most decay * v * coupling(j->b).
-                psd, dmax = self._post(psd, dmax)
+                psd, dmax = self._post(self._coupling_dev, psd, dmax)
                 psd_host = np.asarray(psd)
                 rep.maybe_repartition(it, psd_host, cfg.hot_ratio)
                 history.append({
@@ -600,6 +703,21 @@ class StructureAwareEngine:
         metrics.wall_time_s = t.elapsed
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
+
+
+def coupling_from_counts(block_edge_counts: np.ndarray,
+                         program: VertexProgram,
+                         block_size: int) -> np.ndarray:
+    """(P, P) staleness-coupling matrix from the block->block edge-count
+    matrix W_jb (number of edges from block j's vertices into block b).
+    Factored out of the engine so the streaming subsystem can maintain W
+    incrementally under edge deltas and refresh K without an O(m) rescan.
+    """
+    w = block_edge_counts
+    if program.combine == "sum":
+        k = (np.minimum(w, block_size) / block_size).astype(np.float32)
+        return k * np.float32(program.damping)
+    return (w > 0).astype(np.float32)
 
 
 # -- Betweenness centrality (Brandes, sampled sources) -----------------------

@@ -170,13 +170,85 @@ def chain_graph(n: int, weighted: bool = False) -> Graph:
     return from_edges(n, src, dst, w)
 
 
+def _open_text(path: str):
+    if str(path).endswith(".gz"):
+        import gzip
+        return gzip.open(path, "rt")
+    return open(path, "r")
+
+
+def parse_coo(path: str) -> tuple[np.ndarray, np.ndarray,
+                                  np.ndarray | None]:
+    """Parse a whitespace 'src dst [w]' edge-list file (SNAP-style; ``.gz``
+    accepted) into (src, dst, w|None).
+
+    Vertex ids are parsed as int64 END TO END — routing them through
+    float64 (as ``np.loadtxt(dtype=float)`` would) silently corrupts ids
+    above 2**53, which real SNAP crawls (hashed ids) do contain. Memory
+    stays at the numpy-array level: loadtxt streams the file, and a
+    ``.gz`` input is decompressed exactly once (to a temp file) rather
+    than per parsing pass.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    def parse(opener):
+        with opener() as f:
+            ncols = 0
+            for lineno, line in enumerate(f, 1):
+                # strip inline trailing comments the same way loadtxt's
+                # comments=('#', '%') does, so the column probe agrees
+                # with the parsing passes
+                t = line.split("#")[0].split("%")[0].strip()
+                if not t:
+                    continue
+                k = len(t.split())
+                if ncols == 0:
+                    ncols = k
+                elif k != ncols:
+                    # loadtxt(usecols=...) would silently accept ragged
+                    # rows (dropping weights); fail loudly instead
+                    raise ValueError(
+                        f"{path}:{lineno}: inconsistent column count "
+                        f"({k} vs {ncols})")
+        if ncols == 0:
+            raise ValueError(f"{path}: no edges found")
+        if ncols < 2:
+            raise ValueError(f"{path}: expected 'src dst [w]' rows, got "
+                             f"{ncols} column(s)")
+        with opener() as f:
+            ids = np.loadtxt(f, dtype=np.int64, usecols=(0, 1),
+                             comments=("#", "%"), ndmin=2)
+        w = None
+        if ncols > 2:
+            with opener() as f:
+                w = np.loadtxt(f, dtype=np.float64, usecols=(2,),
+                               comments=("#", "%"),
+                               ndmin=1).astype(np.float32)
+        return ids, w
+
+    if str(path).endswith(".gz"):
+        # decompress once into a temp dir and reopen by path (re-opening a
+        # live NamedTemporaryFile by name is not portable to Windows)
+        with tempfile.TemporaryDirectory() as d:
+            plain = os.path.join(d, "edges.coo")
+            with _open_text(path) as f, open(plain, "w") as out:
+                shutil.copyfileobj(f, out)
+            ids, w = parse(lambda: open(plain, "r"))
+    else:
+        ids, w = parse(lambda: open(path, "r"))
+    if ids.size and ids.min() < 0:
+        bad = ids[ids < 0].flat[0]
+        raise ValueError(f"{path}: negative vertex id {bad} — edge lists "
+                         "must use non-negative integer ids")
+    return ids[:, 0], ids[:, 1], w
+
+
 def load_coo(path: str, n: int | None = None) -> Graph:
-    """Load a whitespace 'src dst [w]' edge-list file (SNAP-style)."""
-    arr = np.loadtxt(path, dtype=np.float64, comments=("#", "%"))
-    arr = np.atleast_2d(arr)
-    src = arr[:, 0].astype(np.int64)
-    dst = arr[:, 1].astype(np.int64)
-    w = arr[:, 2].astype(np.float32) if arr.shape[1] > 2 else None
+    """Load a whitespace 'src dst [w]' edge-list file (SNAP-style, plain or
+    gzip'd) with exact integer id parsing."""
+    src, dst, w = parse_coo(path)
     if n is None:
         n = int(max(src.max(), dst.max())) + 1
     return from_edges(n, src, dst, w)

@@ -19,6 +19,14 @@ COUNTER_FIELDS = ("updates", "edges_processed", "block_loads",
                   "bytes_loaded")
 
 
+def block_io_bytes(edges, block_size):
+    """Shared I/O cost model — bytes loaded when a block is scheduled:
+    4B src id + 4B weight + 4B dst offset per edge, plus the block's vertex
+    values. The ONE definition consumed by the engine accounting, the plan,
+    and the baseline, so the bytes_loaded columns can never desync."""
+    return edges * 12 + block_size * 4
+
+
 @dataclasses.dataclass
 class Metrics:
     iterations: int = 0
@@ -34,9 +42,50 @@ class Metrics:
 
     def absorb_counters(self, counters) -> None:
         """Add a (len(COUNTER_FIELDS),) device-counter flush (cumulative
-        deltas, COUNTER_FIELDS order)."""
+        deltas, COUNTER_FIELDS order). Deltas arrive as exact int64s; no
+        float round-trip, so totals stay exact at any scale."""
         for name, v in zip(COUNTER_FIELDS, counters):
-            setattr(self, name, getattr(self, name) + int(round(float(v))))
+            setattr(self, name, getattr(self, name) + int(v))
+
+
+@dataclasses.dataclass
+class StreamMetrics:
+    """Cumulative accounting for a :class:`repro.stream.StreamingEngine`.
+
+    The quantities the streaming claim rides on: per-batch latency, the
+    dirty-block fraction (how much of the graph a delta actually touches),
+    and edges reprocessed by the warm reconvergence — the number a cold
+    full recompute is compared against.
+    """
+
+    batches: int = 0
+    ingest_time_s: float = 0.0  # delta application (storage mutation)
+    reconverge_time_s: float = 0.0  # warm engine reconvergence
+    edges_inserted: int = 0
+    edges_deleted: int = 0  # deleted edge copies (incl. parallel edges)
+    edges_reprocessed: int = 0  # engine edges_processed across warm runs
+    iterations: int = 0  # warm reconvergence iterations across batches
+    dirty_blocks: int = 0  # cumulative over batches
+    blocks_seen: int = 0  # cumulative P over batches (fraction denominator)
+    appended_blocks: int = 0  # in-place tile appends (no rebuild)
+    rebuilt_blocks: int = 0  # per-block tile-run rebuilds
+    plan_rebuilds: int = 0  # full overflow-triggered plan/storage rebuilds
+    vertices_reset: int = 0  # non-monotone delete re-heat resets
+
+    @property
+    def dirty_frac(self) -> float:
+        return self.dirty_blocks / max(self.blocks_seen, 1)
+
+    @property
+    def latency_per_batch_s(self) -> float:
+        return ((self.ingest_time_s + self.reconverge_time_s)
+                / max(self.batches, 1))
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dirty_frac"] = self.dirty_frac
+        d["latency_per_batch_s"] = self.latency_per_batch_s
+        return d
 
 
 class Timer:

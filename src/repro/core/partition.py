@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core import degrees
 from repro.core.graph import Graph, permute
+from repro.core.metrics import block_io_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,13 +91,24 @@ class TiledStorage:
 
 
 def build_tiled_storage(g: Graph, block_size: int, num_blocks: int,
-                        tile: int = TILE) -> TiledStorage:
-    """Chunk every block's contiguous CSC in-edge range into tile rows."""
+                        tile: int = TILE, slack: float = 0.0,
+                        spare_tiles: int = 0) -> TiledStorage:
+    """Chunk every block's contiguous CSC in-edge range into tile rows.
+
+    ``slack``/``spare_tiles`` over-provision each block's tile run beyond its
+    current edge count (capacity = ceil(edges * (1 + slack) / tile) +
+    spare_tiles). The extra tiles are fully masked invalid, so results are
+    unchanged; the streaming subsystem appends edge inserts into them in
+    place, deferring a full rebuild until a block's run overflows.
+    """
     counts = np.empty(num_blocks, dtype=np.int64)
     for b in range(num_blocks):
         lo, hi = b * block_size, min((b + 1) * block_size, g.n)
         counts[b] = int(g.in_indptr[hi] - g.in_indptr[lo])
     tile_cnt = -(-counts // tile)
+    if slack > 0.0 or spare_tiles > 0:
+        want = np.ceil(counts * (1.0 + slack) / tile).astype(np.int64)
+        tile_cnt = np.maximum(tile_cnt, want) + spare_tiles
     tile_start = np.concatenate([[0], np.cumsum(tile_cnt)[:-1]])
     n_tiles = max(int(tile_cnt.sum()), 1)
 
@@ -167,10 +179,9 @@ class PartitionPlan:
         return lo, min(lo + self.block_size, self.n_live)
 
     def block_bytes(self, b: int) -> int:
-        """I/O proxy: bytes loaded when block b is scheduled (edge src ids +
-        weights + dst offsets + the block's vertex values)."""
-        e = int(self.unified.edges[b])
-        return e * (4 + 4 + 4) + self.block_size * 4
+        """I/O proxy: bytes loaded when block b is scheduled."""
+        return int(block_io_bytes(int(self.unified.edges[b]),
+                                  self.block_size))
 
 
 def _build_storage(g: Graph, block_ids: np.ndarray, block_size: int,
@@ -210,14 +221,21 @@ def _build_storage(g: Graph, block_ids: np.ndarray, block_size: int,
 
 def build_plan(g: Graph, *, block_size: int = 256, alpha: float | None = None,
                sample_frac: float = 0.1, hot_ratio: float = 0.1,
-               seed: int = 0) -> PartitionPlan:
-    """Alg. 1: rank by AD, split hot/cold/dead, chunk into blocks."""
+               seed: int = 0, tile_slack: float = 0.0, spare_tiles: int = 0,
+               keep_dead: bool = False) -> PartitionPlan:
+    """Alg. 1: rank by AD, split hot/cold/dead, chunk into blocks.
+
+    ``keep_dead`` routes zero-AD vertices into the live blocks (they sort to
+    the tail anyway) instead of the unscheduled dead partition — required by
+    the streaming subsystem, where an isolated vertex can gain edges later
+    and must already own a block slot + spare tile capacity.
+    """
     if alpha is None:
         alpha = degrees.suggest_alpha(g)
     ad = degrees.active_degree(g, alpha)
     t1 = degrees.sampled_threshold(ad, sample_frac, hot_ratio, seed)
 
-    dead = ad <= 0.0
+    dead = np.zeros(g.n, dtype=bool) if keep_dead else (ad <= 0.0)
     n_dead = int(dead.sum())
     live_order = np.argsort(-ad[~dead], kind="stable")
     live_ids = np.flatnonzero(~dead)[live_order]
@@ -238,7 +256,8 @@ def build_plan(g: Graph, *, block_size: int = 256, alpha: float | None = None,
     if num_blocks and barrier == 0 and n_live:
         barrier = 1  # always at least one hot block to seed the schedule
 
-    unified = build_tiled_storage(pg, block_size, num_blocks)
+    unified = build_tiled_storage(pg, block_size, num_blocks,
+                                  slack=tile_slack, spare_tiles=spare_tiles)
     return PartitionPlan(graph=pg, inv=inv, order=order, block_size=block_size,
                          num_blocks=num_blocks, n_live=n_live, n_dead=n_dead,
                          barrier_block=barrier, unified=unified, ad=ad_perm,

@@ -38,6 +38,17 @@ class RepartitionState:
         return cls(mode=mode, is_hot=is_hot, barrier=born_barrier,
                    interval=interval, growth=growth, next_at=interval)
 
+    @classmethod
+    def warm(cls, is_hot: np.ndarray, interval: int = 4,
+             growth: float = 1.5) -> "RepartitionState":
+        """Warm re-start over a converged state (streaming re-heat): the hot
+        set is the arbitrary dirty-block mask, not a prefix barrier, so the
+        mode is always 'universal' — re-heating converged blocks is exactly
+        the cold->hot path, even for monotone-cooling programs."""
+        is_hot = np.array(is_hot, dtype=bool)
+        return cls(mode="universal", is_hot=is_hot, barrier=0,
+                   interval=interval, growth=growth, next_at=interval)
+
     def chunk_end(self, max_iterations: int) -> int:
         """Exclusive end of the device-resident iteration chunk: the fused
         engine runs through the iteration at which the repartition cadence

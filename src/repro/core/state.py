@@ -22,6 +22,18 @@ def init_psd(num_blocks: int) -> np.ndarray:
     return np.full(num_blocks, UNSEEN, dtype=np.float32)
 
 
+def warm_psd(num_blocks: int, dirty: np.ndarray) -> np.ndarray:
+    """PSD vector for a warm re-start over an already-converged state
+    (streaming re-heat): dirty blocks carry the UNSEEN sentinel — first-visit
+    priority, and convergence is blocked until every one is re-processed —
+    while clean blocks start individually converged (PSD 0). Clean blocks
+    re-arm through the staleness coupling when a dirty neighbour's values
+    move, exactly like cold blocks re-heating mid-run."""
+    psd = np.zeros(num_blocks, dtype=np.float32)
+    psd[np.asarray(dirty)] = UNSEEN
+    return psd
+
+
 def converged(psd: np.ndarray, t2: float) -> bool:
     """Paper §4: the entire graph converges when sum of PSDs < T2."""
     return bool(np.asarray(psd, dtype=np.float64).sum() < t2)

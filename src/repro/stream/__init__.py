@@ -1,0 +1,9 @@
+"""Streaming-graph subsystem: edge-delta ingestion over the structure-aware
+engine (dirty-block re-heat = the universal repartitioner's cold->hot path,
+applied to graph mutation instead of in-run decay)."""
+from repro.stream.delta import DeltaBatch, synthetic_stream
+from repro.stream.engine import (StreamBatchReport, StreamConfig,
+                                 StreamingEngine)
+
+__all__ = ["DeltaBatch", "synthetic_stream", "StreamBatchReport",
+           "StreamConfig", "StreamingEngine"]

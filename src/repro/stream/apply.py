@@ -1,0 +1,247 @@
+"""Incremental mutation of the engine's edge state.
+
+Two host-side structures cooperate, both living in the PERMUTED vertex
+space of the current engine epoch:
+
+  * :class:`EdgeStore` — the growable COO multiset of the BASE graph (the
+    truth), bucketed per destination AND per source block so a dirty
+    block's in-edge list (plus its mirror rows under symmetrization, and
+    the out-neighbour lookup behind aux-dirty marking) can be re-gathered
+    without a global sort or scan. Deletes are lazy (an alive mask);
+    buckets compact opportunistically on gather, and the arrays themselves
+    compact between batches once dead rows outnumber live ones.
+  * :class:`MutableTiledState` — the mutable mirror of the engine's
+    slack-padded :class:`TiledStorage`. Each block's live edges occupy a
+    prefix of its flattened tile run, so a small insert APPENDS into the
+    spare invalid slots in place; a block that loses edges (or whose
+    in-edge set must be re-derived) is REBUILT from the EdgeStore truth —
+    per-block, vectorised, never a global rebuild. Only when a block's
+    tile run overflows its build-time capacity does the caller fall back
+    to a full plan rebuild.
+
+Symmetrized programs (CC) never match mirrored edge copies individually:
+any block whose mirror in-edges could change is simply rebuilt from the
+base truth (base rows by dst-bucket + mirrored rows by src-bucket), which
+makes the incremental state equal ``symmetrize(mutated base)`` by
+construction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.partition import TiledStorage
+
+
+class EdgeStore:
+    """Growable base-graph COO multiset in permuted ids + block buckets."""
+
+    def __init__(self, psrc: np.ndarray, pdst: np.ndarray, w: np.ndarray,
+                 n: int, num_blocks: int, block_size: int, symmetric: bool):
+        m0 = int(psrc.size)
+        cap = max(2 * m0, 1024)
+        self.n = n
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.symmetric = symmetric
+        self.psrc = np.zeros(cap, dtype=np.int64)
+        self.pdst = np.zeros(cap, dtype=np.int64)
+        self.w = np.zeros(cap, dtype=np.float32)
+        self.alive = np.zeros(cap, dtype=bool)
+        self.psrc[:m0] = psrc
+        self.pdst[:m0] = pdst
+        self.w[:m0] = w
+        self.alive[:m0] = True
+        self.m = m0  # high-water mark
+        self.n_live = m0
+        self.by_dst = self._bucket(self.pdst[:m0])
+        # by-src buckets serve the symmetric mirror gather AND the
+        # aux-dirty out-neighbour lookup, so they are always maintained
+        self.by_src = self._bucket(self.psrc[:m0])
+
+    def _bucket(self, keys: np.ndarray) -> list[np.ndarray]:
+        order = np.argsort(keys // self.block_size, kind="stable")
+        bounds = np.searchsorted(keys[order] // self.block_size,
+                                 np.arange(self.num_blocks + 1))
+        return [order[bounds[b]:bounds[b + 1]].astype(np.int64)
+                for b in range(self.num_blocks)]
+
+    def _grow(self, need: int) -> None:
+        cap = self.psrc.size
+        if self.m + need <= cap:
+            return
+        new_cap = max(2 * cap, self.m + need)
+        for name in ("psrc", "pdst", "w", "alive"):
+            a = getattr(self, name)
+            b = np.zeros(new_cap, dtype=a.dtype)
+            b[:self.m] = a[:self.m]
+            setattr(self, name, b)
+
+    def _bucket_live(self, buckets: list[np.ndarray],
+                     b: int) -> np.ndarray:
+        """Live ids of one bucket, compacting it in passing."""
+        ids = buckets[b]
+        ids = ids[self.alive[ids]]
+        buckets[b] = ids
+        return ids
+
+    def kill_pairs(self, kpsrc: np.ndarray,
+                   kpdst: np.ndarray) -> np.ndarray:
+        """Mark ALL live copies of the given (src, dst) pairs dead; returns
+        the killed copy ids (for degree / coupling / reset bookkeeping).
+        Only the dst-buckets of the deleted pairs are scanned — O(edges of
+        the touched blocks), not O(m)."""
+        if kpsrc.size == 0 or self.m == 0:
+            return np.empty(0, dtype=np.int64)
+        dkeys = np.unique(kpsrc * self.n + kpdst)
+        cand = [self._bucket_live(self.by_dst, int(b))
+                for b in np.unique(kpdst // self.block_size)]
+        cand = (np.concatenate(cand) if cand
+                else np.empty(0, dtype=np.int64))
+        keys = self.psrc[cand] * self.n + self.pdst[cand]
+        ids = cand[np.isin(keys, dkeys)]
+        self.alive[ids] = False
+        self.n_live -= ids.size
+        return ids
+
+    def maybe_compact(self, max_dead_frac: float = 0.5) -> bool:
+        """Reclaim dead rows once they outnumber the live ones: a
+        long-lived engine under steady insert/delete churn must not grow
+        its arrays (and its scan costs) without bound. Invalidates all
+        previously-returned ids — call only between batches."""
+        dead = self.m - self.n_live
+        if self.m < 1024 or dead <= self.n_live * max_dead_frac:
+            return False
+        live = np.flatnonzero(self.alive[:self.m])
+        k = live.size
+        for name in ("psrc", "pdst", "w"):
+            a = getattr(self, name)
+            a[:k] = a[live]
+        self.alive[:k] = True
+        self.alive[k:self.m] = False
+        self.m = k
+        self.by_dst = self._bucket(self.pdst[:k])
+        self.by_src = self._bucket(self.psrc[:k])
+        return True
+
+    def insert(self, ipsrc: np.ndarray, ipdst: np.ndarray,
+               iw: np.ndarray) -> np.ndarray:
+        """Append insert copies; returns their ids."""
+        k = int(ipsrc.size)
+        if k == 0:
+            return np.empty(0, dtype=np.int64)
+        self._grow(k)
+        ids = np.arange(self.m, self.m + k, dtype=np.int64)
+        self.psrc[ids] = ipsrc
+        self.pdst[ids] = ipdst
+        self.w[ids] = iw
+        self.alive[ids] = True
+        self.m += k
+        self.n_live += k
+        for buckets, keys in ((self.by_dst, ipdst),
+                              (self.by_src, ipsrc)):
+            kb = keys // self.block_size
+            for b in np.unique(kb):
+                buckets[int(b)] = np.concatenate(
+                    [buckets[int(b)], ids[kb == b]])
+        return ids
+
+    def gather_block(self, b: int) -> tuple[np.ndarray, np.ndarray,
+                                            np.ndarray]:
+        """All live in-edges of block b as (src, dst_local, w) — base rows
+        plus mirrored rows for symmetric engines. Compacts the buckets."""
+        lo = b * self.block_size
+        ids = self._bucket_live(self.by_dst, b)
+        esrc, edst, ew = self.psrc[ids], self.pdst[ids], self.w[ids]
+        if self.symmetric:
+            mid = self._bucket_live(self.by_src, b)
+            esrc = np.concatenate([esrc, self.pdst[mid]])
+            edst = np.concatenate([edst, self.psrc[mid]])
+            ew = np.concatenate([ew, self.w[mid]])
+        return (esrc.astype(np.int32), (edst - lo).astype(np.int32), ew)
+
+    def out_blocks_of(self, vertices: np.ndarray) -> np.ndarray:
+        """Destination blocks of the live INTERNAL out-edges of the given
+        vertices — the blocks whose aggregates silently change when those
+        sources' aux (e.g. out-degree) changes. Scans only the buckets of
+        the vertices' own blocks, not the whole edge set."""
+        if vertices.size == 0:
+            return np.empty(0, dtype=np.int64)
+        c = self.block_size
+        out: list[np.ndarray] = []
+        for b in np.unique(vertices // c):
+            ids = self._bucket_live(self.by_src, int(b))
+            sel = ids[np.isin(self.psrc[ids], vertices)]
+            if sel.size:
+                out.append(self.pdst[sel] // c)
+            if self.symmetric:
+                # mirrored out-edges of v are its reversed base in-edges
+                mid = self._bucket_live(self.by_dst, int(b))
+                msel = mid[np.isin(self.pdst[mid], vertices)]
+                if msel.size:
+                    out.append(self.psrc[msel] // c)
+        if not out:
+            return np.empty(0, dtype=np.int64)
+        return np.unique(np.concatenate(out))
+
+    def live_base(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The live base multiset (permuted ids)."""
+        live = self.alive[:self.m]
+        return (self.psrc[:self.m][live], self.pdst[:self.m][live],
+                self.w[:self.m][live])
+
+
+class MutableTiledState:
+    """Mutable host mirror of one epoch's slack-padded TiledStorage.
+
+    Invariant: block b's live edges occupy the first ``fill[b]`` slots of
+    its flattened tile run ``[slot_lo[b], slot_lo[b] + cap[b])``; every
+    other slot is masked invalid.
+    """
+
+    def __init__(self, store: TiledStorage):
+        self.tile = store.tile
+        self.num_blocks = store.num_blocks
+        self.shape2d = store.src.shape
+        self.src = store.src.reshape(-1).copy()
+        self.dstl = store.dst_local.reshape(-1).copy()
+        self.w = store.w.reshape(-1).copy()
+        self.valid = store.valid.reshape(-1).copy()
+        self.slot_lo = store.tile_start.astype(np.int64) * self.tile
+        self.cap = store.tile_cnt.astype(np.int64) * self.tile
+        self.fill = np.asarray(store.edges, dtype=np.int64).copy()
+
+    def append(self, b: int, asrc: np.ndarray, adstl: np.ndarray,
+               aw: np.ndarray) -> bool:
+        """In-place append into block b's spare slots; False on overflow."""
+        k = int(asrc.size)
+        if self.fill[b] + k > self.cap[b]:
+            return False
+        lo = int(self.slot_lo[b] + self.fill[b])
+        self.src[lo:lo + k] = asrc
+        self.dstl[lo:lo + k] = adstl
+        self.w[lo:lo + k] = aw
+        self.valid[lo:lo + k] = True
+        self.fill[b] += k
+        return True
+
+    def rebuild(self, b: int, esrc: np.ndarray, edstl: np.ndarray,
+                ew: np.ndarray) -> bool:
+        """Rewrite block b's whole tile run from truth; False on overflow."""
+        k = int(esrc.size)
+        if k > self.cap[b]:
+            return False
+        lo = int(self.slot_lo[b])
+        self.src[lo:lo + k] = esrc
+        self.dstl[lo:lo + k] = edstl
+        self.w[lo:lo + k] = ew
+        self.valid[lo:lo + k] = True
+        self.valid[lo + k:lo + int(self.cap[b])] = False
+        self.fill[b] = k
+        return True
+
+    def arrays2d(self) -> dict:
+        """The device-upload view (same geometry as the compiled epoch)."""
+        return {"src": self.src.reshape(self.shape2d),
+                "dst_local": self.dstl.reshape(self.shape2d),
+                "w": self.w.reshape(self.shape2d),
+                "valid": self.valid.reshape(self.shape2d)}

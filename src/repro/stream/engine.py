@@ -1,0 +1,337 @@
+"""StreamingEngine: ingest edge deltas, re-heat dirty blocks, reconverge.
+
+Wraps one :class:`StructureAwareEngine` epoch and alternates
+
+    ingest (incremental storage mutation, `apply.py`)
+      -> dirty-block re-heat (affected blocks labelled hot with PSD =
+         UNSEEN, convergence flags of clean blocks left converged,
+         values warm-started from the previous fixpoint)
+      -> fused convergence chunk (`engine._get_chunk`, the on-device
+         while-loop — the steady-state path)
+
+which is exactly the universal repartitioner's cold->hot path (§3.3)
+driven by graph mutation instead of in-run decay. Because the engine's
+edge state is a traced argument (`EdgeData`), the mutated tiles re-enter
+the ALREADY-COMPILED superstep — no per-batch recompilation; a full plan
+rebuild (and recompile) happens only when a block's slack tile run
+overflows.
+
+Non-monotone deletions: min/max programs can never take back a value, so
+before the warm re-start the program's ``reset_on_delete`` hook
+re-initialises every vertex whose value might (transitively) depend on a
+deleted edge (KickStarter-style trimming; see `algorithms.py`). PageRank
+needs no resets — its apply() ignores the old value, the warm state is
+just a good initial guess.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import state as state_lib
+from repro.core.algorithms import VertexProgram
+from repro.core.engine import (EngineConfig, RunResult, StructureAwareEngine,
+                               WarmStart, coupling_from_counts)
+from repro.core.graph import Graph, edges_of, from_edges, symmetrize
+from repro.core.metrics import StreamMetrics, Timer
+from repro.stream.apply import EdgeStore, MutableTiledState
+from repro.stream.delta import DeltaBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    tile_slack: float = 0.5  # spare tile capacity fraction per block
+    spare_tiles: int = 1  # flat extra tiles per block (covers empty blocks)
+    warm: bool = True  # False: cold full recompute per batch (reference)
+
+
+@dataclasses.dataclass
+class StreamBatchReport:
+    inserts: int
+    deletes: int  # killed base edge copies (incl. parallel edges)
+    dirty_blocks: int
+    num_blocks: int
+    appended_blocks: int
+    rebuilt_blocks: int
+    plan_rebuild: bool
+    vertices_reset: int
+    iterations: int
+    edges_processed: int
+    ingest_time_s: float
+    reconverge_time_s: float
+    converged: bool
+
+    @property
+    def dirty_frac(self) -> float:
+        return self.dirty_blocks / max(self.num_blocks, 1)
+
+    @property
+    def latency_s(self) -> float:
+        return self.ingest_time_s + self.reconverge_time_s
+
+
+class StreamingEngine:
+    """Long-lived engine over a mutating graph (fixed vertex set)."""
+
+    def __init__(self, graph: Graph, program: VertexProgram,
+                 config: EngineConfig = EngineConfig(),
+                 stream: StreamConfig = StreamConfig()):
+        self.program = program
+        self.stream = stream
+        self.config = dataclasses.replace(
+            config, tile_slack=stream.tile_slack,
+            spare_tiles=stream.spare_tiles, keep_dead_blocks=True)
+        self.metrics = StreamMetrics()
+        self.n = graph.n
+        s, d, w = edges_of(graph)
+        self._build_epoch(s, d, w)
+        # bootstrap: one cold run to the initial fixpoint
+        self.initial_result: RunResult = self.engine.run()
+        self._values = self.initial_result.values
+
+    # -- epoch management ----------------------------------------------------
+    def _build_epoch(self, src: np.ndarray, dst: np.ndarray,
+                     w: np.ndarray) -> None:
+        """(Re)build engine + mutable mirrors from a base COO snapshot."""
+        g = from_edges(self.n, src, dst, w)
+        self.engine = StructureAwareEngine(g, self.program, self.config)
+        plan = self.engine.plan
+        inv = plan.inv
+        sym = self.program.needs_symmetric
+        self.store = EdgeStore(inv[src], inv[dst],
+                               np.asarray(w, dtype=np.float32), self.n,
+                               plan.num_blocks, plan.block_size, sym)
+        self.tiles = MutableTiledState(plan.unified)
+        # incrementally-maintained degrees of the INTERNAL (symmetrized)
+        # graph, permuted order — the activity inputs (paper Eq. 1)
+        self.out_deg = plan.graph.out_deg.astype(np.int64)
+        self.in_deg = plan.graph.in_deg.astype(np.int64)
+        # block -> block internal edge counts (staleness coupling truth)
+        self.W = self.engine.coupling_counts.copy()
+        self._aux = np.asarray(self.engine.aux)
+
+    def _rebuild_epoch(self) -> None:
+        ps, pd, w = self.store.live_base()
+        order = self.engine.plan.order
+        self._build_epoch(order[ps], order[pd], w)
+        self.metrics.plan_rebuilds += 1
+
+    # -- public state --------------------------------------------------------
+    @property
+    def values(self) -> np.ndarray:
+        """Current converged values, indexed by original vertex id."""
+        return self._values
+
+    def current_graph(self) -> Graph:
+        """The mutated base graph (original ids) — what a cold run sees."""
+        ps, pd, w = self.store.live_base()
+        order = self.engine.plan.order
+        return from_edges(self.n, order[ps], order[pd], w)
+
+    def activity(self, alpha: float | None = None) -> np.ndarray:
+        """Incrementally-maintained per-vertex activity a*in + b*out (the
+        degree function D(v) = out + alpha*in of paper Eq. 1), original
+        ids — no rescan of the edge set."""
+        a = self.engine.plan.alpha if alpha is None else alpha
+        d = (self.out_deg + a * self.in_deg)
+        return d[self.engine.plan.inv]
+
+    # -- ingest --------------------------------------------------------------
+    def ingest(self, batch: DeltaBatch) -> StreamBatchReport:
+        prog, eng = self.program, self.engine
+        plan = eng.plan
+        c = plan.block_size
+        inv = plan.inv
+        self._validate(batch)
+        sym = prog.needs_symmetric
+        appended = rebuilt = 0
+        n_reset = 0
+        reset_blocks = np.empty(0, dtype=np.int64)
+
+        with Timer() as t_ing:
+            # 0. reclaim dead rows before any ids from this batch exist
+            self.store.maybe_compact()
+            # 1. mutate the base truth (deletes first, then inserts)
+            killed = self.store.kill_pairs(inv[batch.del_src],
+                                           inv[batch.del_dst])
+            killed_orig = (plan.order[self.store.psrc[killed]],
+                           plan.order[self.store.pdst[killed]],
+                           self.store.w[killed].copy())
+            ip_src, ip_dst = inv[batch.ins_src], inv[batch.ins_dst]
+            ins_ids = self.store.insert(ip_src, ip_dst, batch.ins_w)
+            self._bump(killed, -1)
+            self._bump(ins_ids, +1)
+
+            # 2. per-block tile mutation: blocks that lost edges (or whose
+            # mirror in-edges changed) rebuild from truth; insert-only
+            # blocks append into their spare slots
+            rebuild_set = self._blocks_of(self.store.pdst[killed])
+            if sym:
+                rebuild_set = np.union1d(rebuild_set,
+                                         self._blocks_of(
+                                             self.store.psrc[killed]))
+            ins_rows = [(ip_dst // c, ip_src, ip_dst, self.store.w[ins_ids])]
+            if sym:
+                ins_rows.append((ip_src // c, ip_dst, ip_src,
+                                 self.store.w[ins_ids]))
+            overflow = False
+            for b in rebuild_set:
+                if not self.tiles.rebuild(int(b),
+                                          *self.store.gather_block(int(b))):
+                    overflow = True
+                    break
+                rebuilt += 1
+            append_set = np.setdiff1d(
+                np.unique(np.concatenate([blk for blk, *_ in ins_rows]))
+                if ins_ids.size else np.empty(0, np.int64), rebuild_set)
+            if not overflow:
+                for b in append_set:
+                    asrc = np.concatenate(
+                        [es[blk == b] for blk, es, _, _ in ins_rows])
+                    adst = np.concatenate(
+                        [ed[blk == b] for blk, _, ed, _ in ins_rows])
+                    aw = np.concatenate(
+                        [ew[blk == b] for blk, _, _, ew in ins_rows])
+                    if not self.tiles.append(
+                            int(b), asrc.astype(np.int32),
+                            (adst - int(b) * c).astype(np.int32), aw):
+                        overflow = True
+                        break
+                    appended += 1
+
+            # 3. non-monotone deletions: KickStarter-style trimming before
+            # the warm start (min/max programs cannot take a value back).
+            # Cold reference mode restarts from program.init, so it skips
+            # the trimming entirely.
+            if (self.stream.warm and prog.reset_on_delete is not None
+                    and killed.size):
+                g_new = self._internal_graph()
+                mask = np.asarray(prog.reset_on_delete(
+                    g_new, self._values, *killed_orig))
+                if mask.any():
+                    init_vals, _ = prog.init(g_new)
+                    self._values = self._values.copy()
+                    self._values[mask] = init_vals[mask]
+                    reset_blocks = self._blocks_of(
+                        inv[np.flatnonzero(mask)])
+                    n_reset = int(mask.sum())
+
+            # 4. aux refresh from the incremental degrees; blocks whose
+            # aggregates change because a SOURCE's aux changed (e.g. a
+            # vertex's out-degree splits its rank differently) are dirty
+            # even though their own storage did not move
+            aux_dirty = np.empty(0, dtype=np.int64)
+            if prog.aux_fn is not None:
+                aux_new = np.asarray(
+                    prog.aux_fn(self.out_deg, self.in_deg), dtype=np.float32)
+                changed = np.flatnonzero(aux_new != self._aux)
+                if changed.size and not overflow:
+                    aux_dirty = self.store.out_blocks_of(changed)
+                self._aux = aux_new
+
+            # 5. commit to the engine — inside the ingest timer, so both
+            # the worst case (overflow -> full plan rebuild) and the
+            # device upload are billed to the batch's latency
+            if overflow:
+                # a block outgrew its slack capacity: new epoch
+                # (re-permute by current activity, re-provision slack,
+                # recompile); values stay warm, every block re-heats. The
+                # partial appends/rebuilds made before the overflow were
+                # discarded with the old tiles — do not let them count as
+                # in-place maintenance
+                appended = rebuilt = 0
+                self._rebuild_epoch()
+                plan = self.engine.plan
+                dirty = np.ones(plan.num_blocks, dtype=bool)
+                is_hot = np.zeros(plan.num_blocks, dtype=bool)
+                is_hot[:plan.barrier_block] = True
+                psd0 = state_lib.init_psd(plan.num_blocks)
+            else:
+                a2d = self.tiles.arrays2d()
+                eng.set_edge_data(aux=self._aux, **a2d)
+                eng.set_coupling(coupling_from_counts(self.W, prog, c))
+                eng.edge_counts = self.tiles.fill.copy()
+                dirty = np.zeros(plan.num_blocks, dtype=bool)
+                for ids in (rebuild_set, append_set, aux_dirty,
+                            reset_blocks):
+                    dirty[ids.astype(np.int64)] = True
+                is_hot = dirty.copy()
+                psd0 = state_lib.warm_psd(plan.num_blocks, dirty)
+
+        res = None
+        with Timer() as t_run:
+            if self.stream.warm:
+                if dirty.any():
+                    vals_perm = self._values[self.engine.plan.order].astype(
+                        np.float32)
+                    res = self.engine.run(warm=WarmStart(
+                        values=self.engine.pad_values(vals_perm),
+                        psd=psd0, is_hot=is_hot))
+            else:
+                # reference mode: cold full recompute on the SAME mutated
+                # storage (program init values are structure-independent)
+                res = self.engine.run()
+            if res is not None:
+                self._values = res.values
+
+        report = StreamBatchReport(
+            inserts=batch.n_inserts, deletes=int(killed.size),
+            dirty_blocks=int(dirty.sum()),
+            num_blocks=int(self.engine.plan.num_blocks),
+            appended_blocks=appended, rebuilt_blocks=rebuilt,
+            plan_rebuild=bool(overflow), vertices_reset=n_reset,
+            iterations=res.metrics.iterations if res else 0,
+            edges_processed=res.metrics.edges_processed if res else 0,
+            ingest_time_s=t_ing.elapsed, reconverge_time_s=t_run.elapsed,
+            converged=res.metrics.converged if res else True)
+        self._absorb(report)
+        return report
+
+    # -- internals -----------------------------------------------------------
+    def _validate(self, batch: DeltaBatch) -> None:
+        for a in (batch.ins_src, batch.ins_dst, batch.del_src,
+                  batch.del_dst):
+            if a.size and (a.min() < 0 or a.max() >= self.n):
+                raise ValueError(
+                    f"delta vertex ids must be in [0, {self.n}) — the "
+                    "streaming engine mutates edges over a fixed vertex set")
+
+    def _blocks_of(self, vertices: np.ndarray) -> np.ndarray:
+        if vertices.size == 0:
+            return np.empty(0, dtype=np.int64)
+        return np.unique(vertices // self.engine.plan.block_size)
+
+    def _bump(self, ids: np.ndarray, sign: int) -> None:
+        """Degree + block-coupling counts for internal copies (with mirrors
+        for symmetric engines) — incremental, no edge rescans."""
+        if ids.size == 0:
+            return
+        c = self.engine.plan.block_size
+        ps, pd = self.store.psrc[ids], self.store.pdst[ids]
+        np.add.at(self.out_deg, ps, sign)
+        np.add.at(self.in_deg, pd, sign)
+        np.add.at(self.W, (ps // c, pd // c), sign)
+        if self.program.needs_symmetric:
+            np.add.at(self.out_deg, pd, sign)
+            np.add.at(self.in_deg, ps, sign)
+            np.add.at(self.W, (pd // c, ps // c), sign)
+
+    def _internal_graph(self) -> Graph:
+        g = self.current_graph()
+        return symmetrize(g) if self.program.needs_symmetric else g
+
+    def _absorb(self, r: StreamBatchReport) -> None:
+        m = self.metrics
+        m.batches += 1
+        m.ingest_time_s += r.ingest_time_s
+        m.reconverge_time_s += r.reconverge_time_s
+        m.edges_inserted += r.inserts
+        m.edges_deleted += r.deletes
+        m.edges_reprocessed += r.edges_processed
+        m.iterations += r.iterations
+        m.dirty_blocks += r.dirty_blocks
+        m.blocks_seen += r.num_blocks
+        m.appended_blocks += r.appended_blocks
+        m.rebuilt_blocks += r.rebuilt_blocks
+        m.vertices_reset += r.vertices_reset

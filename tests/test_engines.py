@@ -87,6 +87,26 @@ def test_betweenness_engines_agree():
     assert np.allclose(bc_sa, bc_base, rtol=1e-4, atol=1e-6)
 
 
+def test_betweenness_chain_oracle():
+    """Directed path 0->1->...->k from source 0: Brandes dependency is
+    delta(v) = (n-1) - v, and the source itself accumulates nothing."""
+    n = 8
+    g = G.chain_graph(n)
+    bc, metrics = betweenness(g, [0], CFG)
+    expect = np.array([0.0] + [n - 1 - v for v in range(1, n)])
+    assert np.allclose(bc, expect, atol=1e-6)
+    assert metrics.iterations > 0 and metrics.updates > 0
+
+
+def test_betweenness_diamond_split_paths():
+    """Two equal-length shortest paths: the middles share the dependency
+    (sigma-weighted), the endpoints carry none."""
+    #    0 -> 1 -> 3 ; 0 -> 2 -> 3
+    g = G.from_edges(4, [0, 0, 1, 2], [1, 2, 3, 3])
+    bc, _ = betweenness(g, [0], CFG)
+    assert np.allclose(bc, [0.0, 0.5, 0.5, 0.0], atol=1e-6)
+
+
 def test_dead_partition_one_shot():
     """Zero-degree vertices converge at init and are never scheduled."""
     g = G.from_edges(10, [0, 1], [1, 0])  # vertices 2..9 dead

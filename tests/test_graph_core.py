@@ -92,3 +92,128 @@ def test_block_bytes_positive(core_periphery_small):
     plan = build_plan(core_periphery_small, block_size=256)
     for b in range(plan.num_blocks):
         assert plan.block_bytes(b) > 0
+
+
+def test_tiled_storage_slack_capacity():
+    g = G.powerlaw_graph(300, avg_deg=4, seed=1)
+    plan = build_plan(g, block_size=64)
+    from repro.core.partition import build_tiled_storage
+    base = build_tiled_storage(plan.graph, 64, plan.num_blocks)
+    slacked = build_tiled_storage(plan.graph, 64, plan.num_blocks,
+                                  slack=0.5, spare_tiles=1)
+    assert np.all(slacked.tile_cnt >= base.tile_cnt + 1)  # spare tile
+    assert np.array_equal(slacked.edges, base.edges)  # same live content
+    # per-block live multisets identical despite the padding
+    for b in range(plan.num_blocks):
+        for st_ in (base, slacked):
+            t0 = int(st_.tile_start[b]) * st_.tile
+            e = int(st_.edges[b])
+            assert int(st_.valid.reshape(-1)[t0:t0 + e].sum()) == e
+
+
+def test_keep_dead_blocks():
+    g = G.from_edges(10, [0, 1], [1, 0])  # vertices 2..9 isolated
+    plan = build_plan(g, block_size=4, keep_dead=True)
+    assert plan.n_dead == 0 and plan.n_live == 10
+    assert plan.num_blocks * plan.block_size >= 10  # all vertices in blocks
+
+
+# -- load_coo (satellite: exact int ids, .gz, negative-id errors) ------------
+def test_load_coo_roundtrip(tmp_path):
+    g = G.powerlaw_graph(120, avg_deg=4, seed=3, weighted=True)
+    s, d, w = G.edges_of(g)
+    path = tmp_path / "edges.txt"
+    with open(path, "w") as f:
+        f.write("# comment line\n% another comment\n")
+        for a, b, ww in zip(s, d, w):
+            f.write(f"{a} {b} {ww:.6f}\n")
+    g2 = G.load_coo(str(path), n=g.n)
+    assert g2.n == g.n and g2.m == g.m
+    assert np.array_equal(g2.in_indptr, g.in_indptr)
+    assert np.array_equal(g2.in_src, g.in_src)
+    assert np.allclose(g2.in_w, g.in_w, atol=1e-5)
+
+
+def test_load_coo_gzip(tmp_path):
+    import gzip
+    path = tmp_path / "edges.txt.gz"
+    with gzip.open(path, "wt") as f:
+        f.write("# tiny\n0 1\n1 2\n2 0\n")
+    g = G.load_coo(str(path))
+    assert g.n == 3 and g.m == 3
+
+
+def test_parse_coo_exact_large_ids(tmp_path):
+    """Ids above 2**53 are NOT representable in float64 — the parse must
+    keep them exact (the old float path silently mapped 2**53+1 -> 2**53)."""
+    big = 2**53 + 1
+    path = tmp_path / "big.txt"
+    path.write_text(f"0 {big}\n{big} 1\n")
+    s, d, w = G.parse_coo(str(path))
+    assert int(d[0]) == big and int(s[1]) == big
+    assert w is None
+    assert float(np.float64(big)) != big  # the corruption being guarded
+
+
+def test_load_coo_inline_comments(tmp_path):
+    """Trailing inline comments are stripped like np.loadtxt does — they
+    must not confuse the column probe."""
+    path = tmp_path / "inline.txt"
+    path.write_text("0 1 # first\n1 2\n2 0 % last\n")
+    g = G.load_coo(str(path))
+    assert g.n == 3 and g.m == 3
+
+
+def test_load_coo_ragged_columns_error(tmp_path):
+    """A mixed 2/3-column file must fail loudly, not silently drop the
+    weight column."""
+    path = tmp_path / "ragged.txt"
+    path.write_text("0 1\n1 2 0.5\n")
+    with pytest.raises(ValueError, match="inconsistent column count"):
+        G.load_coo(str(path))
+
+
+def test_load_coo_negative_id_error(tmp_path):
+    path = tmp_path / "neg.txt"
+    path.write_text("0 1\n-3 2\n")
+    with pytest.raises(ValueError, match="negative"):
+        G.load_coo(str(path))
+
+
+def test_load_coo_empty_error(tmp_path):
+    path = tmp_path / "empty.txt"
+    path.write_text("# nothing here\n")
+    with pytest.raises(ValueError, match="no edges"):
+        G.load_coo(str(path))
+
+
+# -- permute (satellite: results must map back through inv) ------------------
+def test_permute_roundtrip_structure():
+    g = G.powerlaw_graph(200, avg_deg=4, seed=5, weighted=True)
+    order = np.random.default_rng(0).permutation(g.n)
+    pg, inv = G.permute(g, order)
+    assert np.array_equal(inv[order], np.arange(g.n))
+    # degrees travel with the relabelling
+    assert np.array_equal(pg.out_deg[inv], g.out_deg)
+    assert np.array_equal(pg.in_deg[inv], g.in_deg)
+    # edge multiset is preserved under the relabelling
+    s, d, w = G.edges_of(g)
+    ps, pd, pw = G.edges_of(pg)
+    a = sorted(zip(s, d, np.round(w, 5)))
+    b = sorted(zip(order[ps], order[pd], np.round(pw, 5)))
+    assert a == b
+
+
+def test_permute_engine_results_map_back():
+    """Running on a permuted graph and mapping back through inv must match
+    the unpermuted run (the engine itself relies on this contract for its
+    internal AD sort)."""
+    from repro.core import algorithms as A
+    from repro.core.engine import EngineConfig, StructureAwareEngine
+    g = G.powerlaw_graph(400, avg_deg=4, seed=6, weighted=True)
+    order = np.random.default_rng(1).permutation(g.n)
+    pg, inv = G.permute(g, order)
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128)
+    plain = StructureAwareEngine(g, A.pagerank(), cfg).run()
+    perm = StructureAwareEngine(pg, A.pagerank(), cfg).run()
+    assert np.allclose(perm.values[inv], plain.values, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,277 @@
+"""Streaming subsystem: delta generation, incremental storage mutation, and
+the acceptance property — after every DeltaBatch the warm StreamingEngine
+matches a cold StructureAwareEngine run on the mutated graph (PR + SSSP +
+CC, including deletions, which exercise the non-monotone re-heat path)."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core.engine import EngineConfig, StructureAwareEngine
+from repro.core.partition import build_tiled_storage
+from repro.stream import (DeltaBatch, StreamConfig, StreamingEngine,
+                          synthetic_stream)
+from repro.stream.delta import apply_to_coo
+
+CFG = EngineConfig(t2=1e-9, width=4, block_size=128)
+
+PROGS = {"pagerank": A.pagerank, "sssp": lambda: A.sssp(0), "cc": A.cc}
+
+
+def _close(a, b, **kw):
+    return np.allclose(np.minimum(a, 1e18), np.minimum(b, 1e18), **kw)
+
+
+def _mutated(g, batches, upto):
+    s, d, w = G.edges_of(g)
+    for b in batches[:upto]:
+        s, d, w = apply_to_coo(s, d, w, g.n, b)
+    return G.from_edges(g.n, s, d, w)
+
+
+# -- DeltaBatch / generator --------------------------------------------------
+def test_delta_batch_validation():
+    with pytest.raises(ValueError):
+        DeltaBatch(ins_src=[1, 2], ins_dst=[3], ins_w=[1.0, 1.0],
+                   del_src=[], del_dst=[])
+    with pytest.raises(ValueError):
+        DeltaBatch(ins_src=[], ins_dst=[], ins_w=[],
+                   del_src=[1], del_dst=[])
+    b = DeltaBatch.of(ins=[(0, 1), (2, 3, 0.5)], dels=[(4, 5)])
+    assert b.n_inserts == 2 and b.n_deletes == 1
+    assert b.ins_w.dtype == np.float32 and b.ins_src.dtype == np.int64
+
+
+def test_synthetic_stream_reproducible():
+    g = G.powerlaw_graph(300, avg_deg=4, seed=0)
+    a = synthetic_stream(g, 4, 50, seed=9, weighted=True)
+    b = synthetic_stream(g, 4, 50, seed=9, weighted=True)
+    assert len(a) == len(b) == 4
+    for x, y in zip(a, b):
+        for f in ("ins_src", "ins_dst", "ins_w", "del_src", "del_dst"):
+            assert np.array_equal(getattr(x, f), getattr(y, f))
+    # a different seed must differ somewhere
+    c = synthetic_stream(g, 4, 50, seed=10, weighted=True)
+    assert any(not np.array_equal(x.ins_dst, y.ins_dst)
+               for x, y in zip(a, c))
+
+
+def test_synthetic_stream_deletes_hit_live_edges():
+    """Deletes are drawn from the tracked live multiset, so every delete
+    pair must remove at least one edge when applied in sequence."""
+    g = G.powerlaw_graph(200, avg_deg=4, seed=2)
+    s, d, w = G.edges_of(g)
+    for batch in synthetic_stream(g, 5, 40, seed=1, delete_frac=0.5):
+        keys = set((s * g.n + d).tolist())
+        for u, v in zip(batch.del_src, batch.del_dst):
+            assert int(u) * g.n + int(v) in keys
+        s, d, w = apply_to_coo(s, d, w, g.n, batch)
+
+
+# -- incremental storage -----------------------------------------------------
+def test_incremental_tiles_match_cold_storage():
+    """After a mixed insert/delete stream, every block's live tile content
+    equals (as a multiset) the cold-built storage of the mutated graph
+    under the SAME epoch permutation — the incremental path loses and
+    invents nothing."""
+    g = G.powerlaw_graph(400, avg_deg=5, seed=4, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    batches = synthetic_stream(g, 3, 60, seed=5, delete_frac=0.3,
+                               weighted=True)
+    for batch in batches:
+        se.ingest(batch)
+    assert se.metrics.plan_rebuilds == 0  # else permutations differ
+    plan = se.engine.plan
+    ps, pd, w = se.store.live_base()
+    gp = G.from_edges(g.n, ps, pd, w)  # permuted-space mutated graph
+    cold = build_tiled_storage(gp, plan.block_size, plan.num_blocks)
+    t = se.tiles
+    for b in range(plan.num_blocks):
+        lo = int(t.slot_lo[b])
+        live = slice(lo, lo + int(t.fill[b]))
+        mine = sorted(zip(t.src[live], t.dstl[live], np.round(t.w[live], 5)))
+        c0 = int(cold.tile_start[b]) * cold.tile
+        ref = slice(c0, c0 + int(cold.edges[b]))
+        theirs = sorted(zip(cold.src.reshape(-1)[ref],
+                            cold.dst_local.reshape(-1)[ref],
+                            np.round(cold.w.reshape(-1)[ref], 5)))
+        assert mine == theirs, f"block {b} diverged"
+    assert np.array_equal(t.fill, cold.edges)
+
+
+def test_incremental_degrees_and_coupling_counts():
+    g = G.powerlaw_graph(300, avg_deg=4, seed=6)
+    se = StreamingEngine(g, A.cc(), CFG)  # symmetric: mirrors exercised
+    for batch in synthetic_stream(g, 3, 50, seed=7, delete_frac=0.4):
+        se.ingest(batch)
+    plan = se.engine.plan
+    g_int = G.symmetrize(se.current_graph())
+    assert np.array_equal(se.out_deg, g_int.out_deg[plan.order])
+    assert np.array_equal(se.in_deg, g_int.in_deg[plan.order])
+    # W against a fresh O(m) count of the permuted internal graph
+    inv = plan.inv
+    s, d, _ = G.edges_of(g_int)
+    c = plan.block_size
+    w_ref = np.zeros_like(se.W)
+    np.add.at(w_ref, (inv[s] // c, inv[d] // c), 1)
+    assert np.array_equal(se.W, w_ref)
+
+
+def test_append_in_place_keeps_epoch():
+    """Small inserts go into the spare tile slots: no block rebuild, no
+    plan rebuild, and the engine epoch (compiled fns) is preserved."""
+    g = G.powerlaw_graph(400, avg_deg=5, seed=8)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    se.ingest(DeltaBatch.empty())  # warm the compile cache
+    eng = se.engine
+    rep = se.ingest(DeltaBatch.of(ins=[(1, 2), (3, 4), (5, 6)]))
+    assert rep.appended_blocks > 0 and rep.rebuilt_blocks == 0
+    assert not rep.plan_rebuild
+    assert se.engine is eng  # same epoch, same compiled executables
+
+
+def test_overflow_triggers_plan_rebuild():
+    g = G.powerlaw_graph(300, avg_deg=4, seed=1)
+    se = StreamingEngine(g, A.pagerank(), CFG,
+                         StreamConfig(tile_slack=0.0, spare_tiles=0))
+    hot = 7
+    batch = DeltaBatch(ins_src=np.arange(250) % g.n,
+                       ins_dst=np.full(250, hot),
+                       ins_w=np.ones(250, np.float32),
+                       del_src=[], del_dst=[])
+    rep = se.ingest(batch)
+    assert rep.plan_rebuild and se.metrics.plan_rebuilds == 1
+    cold = StructureAwareEngine(_mutated(g, [batch], 1), A.pagerank(),
+                                CFG).run()
+    assert _close(se.values, cold.values, rtol=1e-4, atol=1e-5)
+
+
+def test_edge_store_compaction_preserves_multiset():
+    from repro.stream.apply import EdgeStore
+    rng = np.random.default_rng(0)
+    n, m = 64, 3000
+    ps = rng.integers(0, n, m)
+    pd = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32)
+    store = EdgeStore(ps, pd, w, n, num_blocks=4, block_size=16,
+                      symmetric=False)
+    store.kill_pairs(ps[:2500], pd[:2500])
+    assert store.n_live < m / 2
+    before = sorted(zip(*(a.tolist() for a in store.live_base())))
+    assert store.maybe_compact()
+    assert store.m == store.n_live  # dead rows reclaimed
+    after = sorted(zip(*(a.tolist() for a in store.live_base())))
+    assert before == after
+    got = sum(store.gather_block(b)[0].size for b in range(4))
+    assert got == store.n_live
+
+
+def test_empty_batch_is_noop():
+    g = G.powerlaw_graph(200, avg_deg=4, seed=3)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    before = se.values.copy()
+    rep = se.ingest(DeltaBatch.empty())
+    assert rep.dirty_blocks == 0 and rep.iterations == 0
+    assert np.array_equal(se.values, before)
+
+
+def test_delta_ids_out_of_range_rejected():
+    g = G.powerlaw_graph(100, avg_deg=3, seed=0)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    with pytest.raises(ValueError):
+        se.ingest(DeltaBatch.of(ins=[(0, 100)]))
+    with pytest.raises(ValueError):
+        se.ingest(DeltaBatch.of(dels=[(-1, 0)]))
+
+
+# -- the acceptance property -------------------------------------------------
+@given(seed=st.integers(0, 20), n=st.integers(200, 600),
+       algo=st.sampled_from(["pagerank", "sssp", "cc"]))
+@settings(max_examples=6, deadline=None)
+def test_stream_matches_cold_property(seed, n, algo):
+    """After every DeltaBatch (inserts AND deletes), the warm incremental
+    engine's values match a from-scratch StructureAwareEngine run on the
+    mutated graph."""
+    g = G.powerlaw_graph(n, avg_deg=4, seed=seed, weighted=True)
+    mk = PROGS[algo]
+    se = StreamingEngine(g, mk(), CFG)
+    batches = synthetic_stream(g, 3, 40, seed=seed + 1, delete_frac=0.3,
+                               weighted=True)
+    for i, batch in enumerate(batches):
+        se.ingest(batch)
+        cold = StructureAwareEngine(_mutated(g, batches, i + 1), mk(),
+                                    CFG).run()
+        assert cold.metrics.converged
+        assert _close(se.values, cold.values, rtol=1e-4, atol=1e-5), \
+            f"{algo} diverged from cold run at batch {i}"
+
+
+def test_delete_only_nonmonotone_reheat():
+    """Deleting a chain's bridge edge must push everything behind it back
+    to INF — the warm min-combine path can only do this through the
+    reset_on_delete trimming (a plain warm restart would keep the stale
+    finite distances forever)."""
+    n = 64
+    g = G.chain_graph(n, weighted=True)
+    se = StreamingEngine(g, A.sssp(0), CFG)
+    assert np.all(se.values[: n // 2] < 1e18)
+    cut = n // 2
+    rep = se.ingest(DeltaBatch.of(dels=[(cut - 1, cut)]))
+    assert rep.vertices_reset >= n - cut
+    cold = StructureAwareEngine(
+        _mutated(g, [DeltaBatch.of(dels=[(cut - 1, cut)])], 1),
+        A.sssp(0), CFG).run()
+    assert _close(se.values, cold.values, rtol=1e-5, atol=1e-5)
+    assert np.all(se.values[cut:] >= 1e18)  # unreachable again
+    assert np.all(se.values[:cut] < 1e18)  # prefix untouched
+
+
+def test_cc_delete_splits_component():
+    """Deleting the only bridge between two halves must split the
+    component labels again (max-propagation cannot lower labels without
+    the reset path)."""
+    # two cliques 0-3 and 4-7 joined by a single bridge 3->4
+    ins = [(i, j) for i in range(4) for j in range(4) if i != j]
+    ins += [(i, j) for i in range(4, 8) for j in range(4, 8) if i != j]
+    src = np.array([e[0] for e in ins] + [3])
+    dst = np.array([e[1] for e in ins] + [4])
+    g = G.from_edges(8, src, dst)
+    se = StreamingEngine(g, A.cc(), CFG)
+    assert len(np.unique(se.values)) == 1  # one component via the bridge
+    se.ingest(DeltaBatch.of(dels=[(3, 4)]))
+    assert len(np.unique(se.values)) == 2
+    cold = StructureAwareEngine(
+        _mutated(g, [DeltaBatch.of(dels=[(3, 4)])], 1), A.cc(), CFG).run()
+    assert _close(se.values, cold.values, atol=1e-6)
+
+
+def test_stream_metrics_accumulate():
+    g = G.powerlaw_graph(300, avg_deg=4, seed=2)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    batches = synthetic_stream(g, 3, 30, seed=4)
+    for b in batches:
+        se.ingest(b)
+    m = se.metrics
+    assert m.batches == 3
+    assert 0 < m.dirty_frac <= 1.0
+    assert m.edges_reprocessed > 0 and m.iterations > 0
+    assert m.edges_inserted == sum(b.n_inserts for b in batches)
+    d = m.as_dict()
+    assert d["batches"] == 3 and "latency_per_batch_s" in d
+
+
+def test_warm_processes_fewer_edges_than_cold_mode():
+    """The headline: reconverging from the warm state through re-heated
+    dirty blocks does strictly less edge work than a cold recompute of
+    the same mutated graph on the same engine."""
+    g = G.core_periphery_graph(4000, avg_deg=6, seed=1, chords=1)
+    batches = synthetic_stream(g, 2, 60, seed=2)
+    warm = StreamingEngine(g, A.pagerank(), CFG)
+    cold = StreamingEngine(g, A.pagerank(), CFG, StreamConfig(warm=False))
+    warm_edges = cold_edges = 0
+    for b in batches:
+        warm_edges += warm.ingest(b).edges_processed
+        cold_edges += cold.ingest(b).edges_processed
+    assert _close(warm.values, cold.values, rtol=1e-4, atol=1e-5)
+    assert warm_edges < cold_edges
