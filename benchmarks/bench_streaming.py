@@ -51,7 +51,10 @@ def run(n: int = 20000, num_batches: int = 4, batch_size: int = 200):
             f"stream/{gname}/pagerank/stream_warm", us_w,
             f"batches={mw.batches};edges={mw.edges_reprocessed};"
             f"iters={mw.iterations};dirty_frac={mw.dirty_frac:.2f};"
-            f"appends={mw.appended_blocks};rebuilds={mw.rebuilt_blocks};"
+            f"upload_frac={mw.upload_frac:.3f};"
+            f"appends={mw.appended_blocks};kills={mw.killed_blocks};"
+            f"rebuilds={mw.rebuilt_blocks};"
+            f"aux_bumped={mw.aux_bumped_blocks};"
             f"plan_rebuilds={mw.plan_rebuilds};agree={agree};"
             f"edge_gain={mc.edges_reprocessed / max(mw.edges_reprocessed, 1):.2f}x;"
             f"speedup_vs_cold={us_c / max(us_w, 1e-9):.2f}x"))

@@ -27,7 +27,12 @@ class VertexProgram:
     needs_symmetric: bool
     monotone_cooling: bool  # True -> barrier repartitioning is sound (PR-like)
     damping: float = 0.85
-    # init(graph) -> (values (n,), aux (n,)); aux is per-vertex constant data
+    # init(graph) -> (values (n,), aux (n,)); aux is per-vertex constant
+    # data. Contract for streaming programs with a reset_on_delete hook:
+    # the VALUES must be structure-independent (a function of n and
+    # program parameters only, like every registered program's) — the
+    # streaming engine re-applies an epoch-time init snapshot to reset
+    # vertices instead of re-running init on the mutated graph.
     init: Callable[[Graph], tuple[np.ndarray, np.ndarray]] = None
     # edge_map(src_val, src_aux, w) -> message
     edge_map: Callable[[Array, Array, Array], Array] = None
@@ -37,9 +42,17 @@ class VertexProgram:
     sd_delta: Callable[[Array, Array], Array] = None
     # -- streaming hooks (repro.stream) -------------------------------------
     # aux_fn(out_deg, in_deg) -> aux: recompute the per-vertex constant from
-    # incrementally-maintained degrees after an edge delta. None => aux is
-    # degree-independent and survives mutation unchanged.
+    # incrementally-maintained degrees after an edge delta. Must be
+    # ELEMENTWISE (the streaming engine evaluates it on just the vertices
+    # whose degrees changed). None => aux is degree-independent and
+    # survives mutation unchanged.
     aux_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None
+    # aux_delta(values, aux_old, aux_new) -> nonnegative per-edge bound on
+    # |edge_map(v, aux_new, w) - edge_map(v, aux_old, w)| for the vertices
+    # whose aux changed (subarray inputs). Lets the streaming engine turn
+    # an aux change into a finite PSD bump on the affected blocks instead
+    # of a full UNSEEN re-heat. None => affected blocks are marked dirty.
+    aux_delta: Callable[..., np.ndarray] | None = None
     # reset_on_delete(g_new, values, del_src, del_dst, del_w) -> bool mask of
     # vertices whose values must be re-initialised before a warm re-start.
     # Needed for min/max programs: apply() can only improve a value, so a
@@ -48,6 +61,12 @@ class VertexProgram:
     # program reconverges from any warm state (e.g. PageRank, whose apply
     # ignores the old value entirely).
     reset_on_delete: Callable[..., np.ndarray] | None = None
+    # reset_on_delete_frontier(successors, n, values, del_src, del_dst,
+    # del_w) -> the same mask, but served by a ``successors(frontier) ->
+    # (src, dst, w)`` out-edge oracle instead of a built Graph, so the
+    # streaming engine can answer it from the EdgeStore's by-src buckets
+    # without rebuilding an O(m) CSR per delete batch.
+    reset_on_delete_frontier: Callable[..., np.ndarray] | None = None
 
     @property
     def identity(self) -> np.float32:
@@ -55,18 +74,46 @@ class VertexProgram:
                 "max": np.float32(-INF)}[self.combine]
 
 
-def _invalidated_by_delete(g: Graph, dist: np.ndarray, dsrc: np.ndarray,
-                           ddst: np.ndarray, dw: np.ndarray,
-                           unit: bool = False) -> np.ndarray:
+def graph_successors(g: Graph, unit: bool = False) -> Callable[[np.ndarray],
+                                                               tuple]:
+    """``successors(frontier) -> (src, dst, w)`` oracle over a built Graph's
+    CSR out-edges — the cold-path implementation of the interface
+    :func:`_invalidated_by_delete` closes over (the streaming engine serves
+    the same interface from its EdgeStore buckets instead). With ``unit``
+    the weight gather is skipped (w is returned as None): unit-weight
+    callers (BFS) overwrite it anyway."""
+    indptr, out_dst, out_w = g.out_indptr, g.out_dst, g.out_w
+
+    def successors(frontier: np.ndarray):
+        starts, ends = indptr[frontier], indptr[frontier + 1]
+        cnt = ends - starts
+        total = int(cnt.sum())
+        if total == 0:
+            e = np.empty(0, dtype=np.int64)
+            return e, e, np.empty(0, dtype=np.float64)
+        eidx = (np.repeat(starts - np.concatenate(
+            [[0], np.cumsum(cnt)[:-1]]), cnt) + np.arange(total))
+        return (np.repeat(frontier, cnt), out_dst[eidx].astype(np.int64),
+                None if unit else out_w[eidx].astype(np.float64))
+
+    return successors
+
+
+def _invalidated_by_delete(successors, n: int, dist: np.ndarray,
+                           dsrc: np.ndarray, ddst: np.ndarray,
+                           dw: np.ndarray, unit: bool = False) -> np.ndarray:
     """KickStarter-style delete trimming for min-combine distance programs:
     the set of vertices whose current distance may (transitively) depend on
     a deleted edge. Seeds are deletion heads whose old distance was achieved
     through the deleted copy; the set closes forward over edges of the NEW
-    graph that were tight under the old distances. Over-approximate (a tie
-    with an intact support still counts as dependent) — sound: every
-    truly-unsupported vertex is included, extras just get recomputed. All
-    vertices outside the mask keep distances that are still achieved by an
-    intact path, so a warm min-combine re-run reconverges exactly."""
+    graph that were tight under the old distances, with the new graph's
+    out-edges served by the ``successors(frontier) -> (src, dst, w)``
+    oracle (a CSR via :func:`graph_successors`, or the streaming
+    EdgeStore's by-src buckets). Over-approximate (a tie with an intact
+    support still counts as dependent) — sound: every truly-unsupported
+    vertex is included, extras just get recomputed. All vertices outside
+    the mask keep distances that are still achieved by an intact path, so
+    a warm min-combine re-run reconverges exactly."""
     d64 = np.asarray(dist, dtype=np.float64)
     dw = (np.ones(len(ddst)) if unit
           else np.asarray(dw, dtype=np.float64))
@@ -76,29 +123,23 @@ def _invalidated_by_delete(g: Graph, dist: np.ndarray, dsrc: np.ndarray,
         return reach[a] & np.isclose(d64[b], d64[a] + wab,
                                      rtol=1e-5, atol=1e-4)
 
-    mask = np.zeros(g.n, dtype=bool)
+    mask = np.zeros(n, dtype=bool)
     dsrc = np.asarray(dsrc, dtype=np.int64)
     ddst = np.asarray(ddst, dtype=np.int64)
     mask[ddst[tight(dsrc, ddst, dw)]] = True
     if not mask.any():
         return mask
-    # frontier-wise closure over the CSR out-edges of newly-masked vertices
+    # frontier-wise closure over the out-edges of newly-masked vertices
     # only: each vertex enters the frontier at most once, so the total work
-    # is O(m + n), not O(depth * m) (a deleted chain head would otherwise
-    # rescan the whole edge set once per hop).
-    indptr, out_dst, out_w = g.out_indptr, g.out_dst, g.out_w
+    # is O(edges touched + n), not O(depth * m) (a deleted chain head would
+    # otherwise rescan the whole edge set once per hop).
     frontier = np.flatnonzero(mask)
     while frontier.size:
-        starts, ends = indptr[frontier], indptr[frontier + 1]
-        cnt = ends - starts
-        total = int(cnt.sum())
-        if total == 0:
+        srcs, dsts, ws = successors(frontier)
+        if srcs.size == 0:
             break
-        eidx = (np.repeat(starts - np.concatenate(
-            [[0], np.cumsum(cnt)[:-1]]), cnt) + np.arange(total))
-        srcs = np.repeat(frontier, cnt)
-        dsts = out_dst[eidx].astype(np.int64)
-        ws = (np.ones(total) if unit else out_w[eidx].astype(np.float64))
+        if unit:
+            ws = np.ones(srcs.size)
         hit = tight(srcs, dsts, ws) & ~mask[dsts]
         frontier = np.unique(dsts[hit])
         mask[frontier] = True
@@ -126,10 +167,17 @@ def pagerank(damping: float = 0.85) -> VertexProgram:
         del in_deg
         return np.maximum(out_deg, 1).astype(np.float32)
 
+    def aux_delta(values, aux_old, aux_new):
+        # edge_map is v / aux: the per-edge message change of a vertex whose
+        # out-degree aux moved is exactly |v| * |1/old - 1/new|
+        return np.abs(np.asarray(values, np.float64)) * np.abs(
+            1.0 / np.asarray(aux_old, np.float64)
+            - 1.0 / np.asarray(aux_new, np.float64))
+
     return VertexProgram(name="pagerank", combine="sum", needs_symmetric=False,
                          monotone_cooling=True, damping=damping, init=init,
                          edge_map=edge_map, apply=apply, sd_delta=sd_delta,
-                         aux_fn=aux_fn)
+                         aux_fn=aux_fn, aux_delta=aux_delta)
 
 
 def sssp(source: int = 0) -> VertexProgram:
@@ -149,13 +197,19 @@ def sssp(source: int = 0) -> VertexProgram:
     def sd_delta(old, new):  # Eq. 4: min of the two results, on change
         return jnp.where(new < old, jnp.minimum(new, old), 0.0)
 
+    def reset_frontier(successors, n, values, dsrc, ddst, dw):
+        return _invalidated_by_delete(successors, n, values, dsrc, ddst, dw,
+                                      unit=False)
+
     def reset_on_delete(g, values, dsrc, ddst, dw):
-        return _invalidated_by_delete(g, values, dsrc, ddst, dw, unit=False)
+        return reset_frontier(graph_successors(g), g.n, values, dsrc, ddst,
+                              dw)
 
     return VertexProgram(name="sssp", combine="min", needs_symmetric=False,
                          monotone_cooling=False, init=init, edge_map=edge_map,
                          apply=apply, sd_delta=sd_delta,
-                         reset_on_delete=reset_on_delete)
+                         reset_on_delete=reset_on_delete,
+                         reset_on_delete_frontier=reset_frontier)
 
 
 def bfs(source: int = 0) -> VertexProgram:
@@ -175,13 +229,19 @@ def bfs(source: int = 0) -> VertexProgram:
     def sd_delta(old, new):
         return jnp.where(new < old, 1.0, 0.0)
 
+    def reset_frontier(successors, n, values, dsrc, ddst, dw):
+        return _invalidated_by_delete(successors, n, values, dsrc, ddst, dw,
+                                      unit=True)
+
     def reset_on_delete(g, values, dsrc, ddst, dw):
-        return _invalidated_by_delete(g, values, dsrc, ddst, dw, unit=True)
+        return reset_frontier(graph_successors(g, unit=True), g.n, values,
+                              dsrc, ddst, dw)
 
     return VertexProgram(name="bfs", combine="min", needs_symmetric=False,
                          monotone_cooling=False, init=init, edge_map=edge_map,
                          apply=apply, sd_delta=sd_delta,
-                         reset_on_delete=reset_on_delete)
+                         reset_on_delete=reset_on_delete,
+                         reset_on_delete_frontier=reset_frontier)
 
 
 def cc() -> VertexProgram:
@@ -202,20 +262,31 @@ def cc() -> VertexProgram:
     def sd_delta(old, new):  # the larger of the two results, on change
         return jnp.where(new > old, jnp.maximum(new, old), 0.0)
 
-    def reset_on_delete(g, values, dsrc, ddst, dw):
+    def _label_reset(values, dsrc, ddst):
         # a deletion can split the component both endpoints sit in: re-flood
         # every vertex carrying that component's label from its own id.
         # Other components are untouched (labels never cross components).
-        del g, dw
         labels = np.unique(np.concatenate(
             [np.asarray(values)[np.asarray(dsrc, dtype=np.int64)],
              np.asarray(values)[np.asarray(ddst, dtype=np.int64)]]))
         return np.isin(np.asarray(values), labels)
 
+    def reset_on_delete(g, values, dsrc, ddst, dw):
+        del g, dw
+        return _label_reset(values, dsrc, ddst)
+
+    def reset_frontier(successors, n, values, dsrc, ddst, dw):
+        # the label rule needs no graph traversal at all — exposing it as a
+        # frontier hook just keeps the streaming engine off the
+        # build-a-CSR fallback path
+        del successors, n, dw
+        return _label_reset(values, dsrc, ddst)
+
     return VertexProgram(name="cc", combine="max", needs_symmetric=True,
                          monotone_cooling=False, init=init, edge_map=edge_map,
                          apply=apply, sd_delta=sd_delta,
-                         reset_on_delete=reset_on_delete)
+                         reset_on_delete=reset_on_delete,
+                         reset_on_delete_frontier=reset_frontier)
 
 
 REGISTRY: dict[str, Callable[..., VertexProgram]] = {

@@ -382,9 +382,12 @@ class StructureAwareEngine:
     # -- streaming hooks -----------------------------------------------------
     def set_edge_data(self, *, src=None, dst_local=None, w=None, valid=None,
                       aux=None) -> None:
-        """Swap (parts of) the device-resident dynamic edge state. Shapes
-        must match the compiled epoch — a geometry change needs a new
-        engine, not new arrays."""
+        """Swap (parts of) the device-resident dynamic edge state with a
+        FULL re-upload — the whole-array fallback of the row-granular
+        ``update_edge_rows`` / ``update_aux`` path the streaming engine
+        uses (kept as external API for callers that rebuilt their arrays
+        wholesale). Shapes must match the compiled epoch — a geometry
+        change needs a new engine, not new arrays."""
         ed = self._ed
         new = EdgeData(
             src=jnp.asarray(src, jnp.int32) if src is not None else ed.src,
@@ -404,10 +407,118 @@ class StructureAwareEngine:
             self.aux = new.aux
 
     def set_coupling(self, coupling: np.ndarray) -> None:
+        """Full (P, P) coupling swap — whole-matrix fallback of
+        ``update_coupling_rows``."""
         if coupling.shape != self._coupling.shape:
             raise ValueError("coupling shape changed within an epoch")
         self._coupling = np.asarray(coupling, dtype=np.float32)
         self._coupling_dev = jnp.asarray(self._coupling)
+
+    # -- incremental streaming commits (sub-O(m) host->device path) ----------
+    # The scatter functions are jitted with DONATED destination buffers, so
+    # the device-resident state is updated in place and the host->device
+    # payload is only the touched rows/entries — never the full arrays the
+    # set_edge_data / set_coupling path re-uploads. Each scatter runs in
+    # FIXED-SIZE chunks (one compiled variant per scatter type — per-batch
+    # index counts never trigger a recompile), with the final partial
+    # chunk padded by duplicates of entry 0 (identical payload, so the
+    # duplicate scatter is order-independent). The returned byte counts
+    # bill the chunked transfer that actually crosses to the device,
+    # indices included.
+    _ROW_CHUNK = 16  # tile rows per scatter call (~100KB payload)
+    _AUX_CHUNK = 256  # aux entries per scatter call
+    _COUPLING_CHUNK = 16  # coupling rows per scatter call
+
+    def _chunked_scatter(self, key: str, arrays: tuple, idx: np.ndarray,
+                         payloads: list, chunk: int) -> tuple[tuple, int]:
+        """Scatter ``payloads`` into ``arrays`` at ``idx`` in fixed-size
+        chunks through one cached donated jit. Returns (new arrays, padded
+        entry count)."""
+        k = int(idx.size)
+        pk = -(-k // chunk) * chunk
+        if pk != k:
+            pad = pk - k
+            idx = np.concatenate([idx, np.full(pad, idx[0], idx.dtype)])
+            payloads = [np.concatenate([p, np.repeat(p[:1], pad, axis=0)])
+                        for p in payloads]
+        fn = self._fns.get(key)
+        if fn is None:
+            na = len(arrays)
+
+            def scatter(*args):
+                arrs, r, ps = args[:na], args[na], args[na + 1:]
+                return tuple(a.at[r].set(p) for a, p in zip(arrs, ps))
+
+            fn = jax.jit(scatter, donate_argnums=tuple(range(na)))
+            self._fns[key] = fn
+        for at in range(0, pk, chunk):
+            arrays = fn(*arrays, jnp.asarray(idx[at:at + chunk]),
+                        *(jnp.asarray(p[at:at + chunk]) for p in payloads))
+        return arrays, pk
+
+    def update_edge_rows(self, rows: np.ndarray, *, src, dst_local, w,
+                         valid) -> int:
+        """Scatter updated TILE ROWS into the device-resident EdgeData.
+        ``rows`` are unified-tile row indices; the payloads are the matching
+        (len(rows), TILE) slices. Returns the transferred bytes (chunked
+        payload + indices)."""
+        rows = np.asarray(rows, dtype=np.int32)
+        if rows.size == 0:
+            return 0
+        ed = self._ed
+        (ns, nd, nw, nv), pk = self._chunked_scatter(
+            "row_scatter", (ed.src, ed.dstl, ed.w, ed.valid), rows,
+            [np.asarray(src, np.int32), np.asarray(dst_local, np.int32),
+             np.asarray(w, np.float32), np.asarray(valid, bool)],
+            self._ROW_CHUNK)
+        self._ed = EdgeData(src=ns, dstl=nd, w=nw, valid=nv, aux=ed.aux)
+        # 4B src + 4B dst offset + 4B w + 1B valid per slot + 4B row index
+        return pk * (int(ns.shape[1]) * 13 + 4)
+
+    def update_aux(self, idx: np.ndarray, vals: np.ndarray) -> int:
+        """Scatter changed per-vertex aux entries into the device-resident
+        EdgeData. Returns the transferred bytes (chunked values +
+        indices)."""
+        idx = np.asarray(idx, dtype=np.int32)
+        vals = np.asarray(vals, dtype=np.float32)
+        if idx.size == 0:
+            return 0
+        (new_aux,), pk = self._chunked_scatter(
+            "aux_scatter", (self._ed.aux,), idx, [vals], self._AUX_CHUNK)
+        self._ed = self._ed._replace(aux=new_aux)
+        self.aux = new_aux
+        return pk * 8
+
+    def update_coupling_rows(self, rows: np.ndarray,
+                             row_vals: np.ndarray) -> int:
+        """Replace changed ROWS of the staleness-coupling matrix (host copy
+        + donated device scatter) — O(changed_rows * P) payload, not the
+        full (P, P) re-upload of ``set_coupling``. Returns the transferred
+        bytes (chunked rows + indices)."""
+        rows = np.asarray(rows, dtype=np.int32)
+        row_vals = np.asarray(row_vals, dtype=np.float32)
+        if rows.size == 0:
+            return 0
+        self._coupling[rows] = row_vals
+        (new_c,), pk = self._chunked_scatter(
+            "coupling_scatter", (self._coupling_dev,), rows, [row_vals],
+            self._COUPLING_CHUNK)
+        self._coupling_dev = new_c
+        return pk * (int(self._coupling.shape[1]) * 4 + 4)
+
+    @property
+    def values_nbytes(self) -> int:
+        """Bytes of one padded warm-values upload."""
+        return int(self._values_len * 4)
+
+    def full_upload_bytes(self) -> int:
+        """Host->device bytes of a FULL dynamic-state refresh (EdgeData +
+        aux + coupling + warm values) — what every delta batch paid before
+        the row-granular update path, and the denominator of the streaming
+        ``upload_frac``."""
+        ed = self._ed
+        edge_bytes = sum(int(a.size) * a.dtype.itemsize for a in ed)
+        return int(edge_bytes + self._coupling.nbytes + self._values_len * 4)
 
     def pad_values(self, values_perm: np.ndarray) -> np.ndarray:
         """Pad a permuted (n,) value vector to the engine's value length."""

@@ -53,9 +53,15 @@ class StreamMetrics:
     """Cumulative accounting for a :class:`repro.stream.StreamingEngine`.
 
     The quantities the streaming claim rides on: per-batch latency, the
-    dirty-block fraction (how much of the graph a delta actually touches),
-    and edges reprocessed by the warm reconvergence — the number a cold
-    full recompute is compared against.
+    dirty-block fraction (how much of the graph a delta actually
+    re-heats), host->device upload bytes (how much of the mutated state
+    actually moves), and edges reprocessed by the warm reconvergence — the
+    number a cold full recompute is compared against.
+
+    ``dirty_blocks`` / ``blocks_seen`` accumulate over IN-PLACE batches
+    only: a tile-overflow batch re-heats every block by construction
+    (``plan_rebuilds`` counts those), and folding it into the average
+    would inflate ``dirty_frac`` past what the in-place path touches.
     """
 
     batches: int = 0
@@ -65,16 +71,24 @@ class StreamMetrics:
     edges_deleted: int = 0  # deleted edge copies (incl. parallel edges)
     edges_reprocessed: int = 0  # engine edges_processed across warm runs
     iterations: int = 0  # warm reconvergence iterations across batches
-    dirty_blocks: int = 0  # cumulative over batches
-    blocks_seen: int = 0  # cumulative P over batches (fraction denominator)
+    dirty_blocks: int = 0  # cumulative over in-place (non-rebuild) batches
+    blocks_seen: int = 0  # cumulative P over in-place batches (denominator)
     appended_blocks: int = 0  # in-place tile appends (no rebuild)
-    rebuilt_blocks: int = 0  # per-block tile-run rebuilds
+    killed_blocks: int = 0  # in-place slot kills (no rebuild, no movement)
+    rebuilt_blocks: int = 0  # per-block tile-run rebuilds (incl. compactions)
+    aux_bumped_blocks: int = 0  # finite-PSD aux re-arms (not re-heated)
     plan_rebuilds: int = 0  # full overflow-triggered plan/storage rebuilds
     vertices_reset: int = 0  # non-monotone delete re-heat resets
+    bytes_uploaded: int = 0  # actual host->device payload across batches
+    bytes_full: int = 0  # what full per-batch re-uploads would have cost
 
     @property
     def dirty_frac(self) -> float:
         return self.dirty_blocks / max(self.blocks_seen, 1)
+
+    @property
+    def upload_frac(self) -> float:
+        return self.bytes_uploaded / max(self.bytes_full, 1)
 
     @property
     def latency_per_batch_s(self) -> float:
@@ -84,6 +98,7 @@ class StreamMetrics:
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["dirty_frac"] = self.dirty_frac
+        d["upload_frac"] = self.upload_frac
         d["latency_per_batch_s"] = self.latency_per_batch_s
         return d
 

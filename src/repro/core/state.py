@@ -22,14 +22,24 @@ def init_psd(num_blocks: int) -> np.ndarray:
     return np.full(num_blocks, UNSEEN, dtype=np.float32)
 
 
-def warm_psd(num_blocks: int, dirty: np.ndarray) -> np.ndarray:
+def warm_psd(num_blocks: int, dirty: np.ndarray,
+             bump: np.ndarray | None = None) -> np.ndarray:
     """PSD vector for a warm re-start over an already-converged state
     (streaming re-heat): dirty blocks carry the UNSEEN sentinel — first-visit
     priority, and convergence is blocked until every one is re-processed —
     while clean blocks start individually converged (PSD 0). Clean blocks
     re-arm through the staleness coupling when a dirty neighbour's values
-    move, exactly like cold blocks re-heating mid-run."""
+    move, exactly like cold blocks re-heating mid-run.
+
+    ``bump`` optionally seeds clean blocks with a finite PSD floor (the
+    streaming engine's aux-staleness bound): the scheduler re-processes
+    them by priority like any re-armed block, but — unlike UNSEEN dirty
+    blocks — they carry no first-visit priority, and a bump below the
+    engine's pruning floor is soundly skipped (same argument as the
+    per-block T2/P prune)."""
     psd = np.zeros(num_blocks, dtype=np.float32)
+    if bump is not None:
+        psd = np.maximum(psd, np.asarray(bump, dtype=np.float32))
     psd[np.asarray(dirty)] = UNSEEN
     return psd
 

@@ -14,7 +14,14 @@ driven by graph mutation instead of in-run decay. Because the engine's
 edge state is a traced argument (`EdgeData`), the mutated tiles re-enter
 the ALREADY-COMPILED superstep — no per-batch recompilation; a full plan
 rebuild (and recompile) happens only when a block's slack tile run
-overflows.
+overflows. The per-batch cost is proportional to the blocks the batch
+TOUCHES, not to m: storage mutation is per-block (in-place slot kills,
+watermark appends, per-block compactions), the device commit scatters
+only the touched tile rows / changed aux entries / changed coupling rows
+into donated resident buffers (`StructureAwareEngine.update_edge_rows`
+and friends), and the delete-reset frontier closure is served from the
+EdgeStore's by-src buckets instead of an O(m) CSR rebuild. The
+`StreamBatchReport.upload_frac` column measures exactly this.
 
 Non-monotone deletions: min/max programs can never take back a value, so
 before the warm re-start the program's ``reset_on_delete`` hook
@@ -53,11 +60,15 @@ class StreamBatchReport:
     dirty_blocks: int
     num_blocks: int
     appended_blocks: int
+    killed_blocks: int  # blocks whose slots were invalidated in place
     rebuilt_blocks: int
+    aux_bumped_blocks: int  # finite-PSD re-arms (aux change, not re-heated)
     plan_rebuild: bool
     vertices_reset: int
     iterations: int
     edges_processed: int
+    bytes_uploaded: int  # actual host->device payload of this batch
+    bytes_full: int  # what a full dynamic-state re-upload would cost
     ingest_time_s: float
     reconverge_time_s: float
     converged: bool
@@ -65,6 +76,15 @@ class StreamBatchReport:
     @property
     def dirty_frac(self) -> float:
         return self.dirty_blocks / max(self.num_blocks, 1)
+
+    @property
+    def upload_frac(self) -> float:
+        """Fraction of the full per-batch upload the batch actually paid —
+        the tentpole number: it scales with the blocks a batch touches,
+        not with m. A warm plan-rebuild batch pays exactly 1.0; cold
+        reference mode never uploads warm values, so its rebuild batches
+        land just under 1.0."""
+        return self.bytes_uploaded / max(self.bytes_full, 1)
 
     @property
     def latency_s(self) -> float:
@@ -109,7 +129,24 @@ class StreamingEngine:
         self.in_deg = plan.graph.in_deg.astype(np.int64)
         # block -> block internal edge counts (staleness coupling truth)
         self.W = self.engine.coupling_counts.copy()
-        self._aux = np.asarray(self.engine.aux)
+        self._aux = np.array(self.engine.aux)
+        # init values are structure-independent for every registered
+        # program (they depend on n and the source id only), so one epoch
+        # snapshot serves every delete-reset without rebuilding a Graph
+        self._init_values = np.asarray(self.program.init(g)[0])
+        self._prewarm_scatters()
+
+    def _prewarm_scatters(self) -> None:
+        """Compile the chunked device-scatter executables at epoch build
+        (identity writes of row/entry 0) so a long-lived engine never pays
+        the compile inside a batch's ingest latency."""
+        eng = self.engine
+        z = np.zeros(1, dtype=np.int64)
+        eng.update_edge_rows(z, **self.tiles.rows2d(z))
+        eng.update_aux(z, self._aux[:1])
+        eng.update_coupling_rows(
+            z, coupling_from_counts(self.W[:1], self.program,
+                                    eng.plan.block_size))
 
     def _rebuild_epoch(self) -> None:
         ps, pd, w = self.store.live_base()
@@ -145,46 +182,65 @@ class StreamingEngine:
         inv = plan.inv
         self._validate(batch)
         sym = prog.needs_symmetric
-        appended = rebuilt = 0
+        appended = rebuilt = killed_blocks = 0
         n_reset = 0
-        reset_blocks = np.empty(0, dtype=np.int64)
+        bytes_up = 0
+        empty = np.empty(0, dtype=np.int64)
+        reset_blocks = empty
 
         with Timer() as t_ing:
-            # 0. reclaim dead rows before any ids from this batch exist
-            self.store.maybe_compact()
             # 1. mutate the base truth (deletes first, then inserts)
             killed = self.store.kill_pairs(inv[batch.del_src],
                                            inv[batch.del_dst])
-            killed_orig = (plan.order[self.store.psrc[killed]],
-                           plan.order[self.store.pdst[killed]],
+            kps, kpd = self.store.psrc[killed], self.store.pdst[killed]
+            killed_orig = (plan.order[kps], plan.order[kpd],
                            self.store.w[killed].copy())
             ip_src, ip_dst = inv[batch.ins_src], inv[batch.ins_dst]
             ins_ids = self.store.insert(ip_src, ip_dst, batch.ins_w)
+            iw = self.store.w[ins_ids]
             self._bump(killed, -1)
             self._bump(ins_ids, +1)
+            # coupling rows whose counts moved (refresh is O(rows * P))
+            wrow_parts = [kps // c, ip_src // c]
+            if sym:
+                wrow_parts += [kpd // c, ip_dst // c]
+            wrows = np.unique(np.concatenate(wrow_parts))
 
-            # 2. per-block tile mutation: blocks that lost edges (or whose
-            # mirror in-edges changed) rebuild from truth; insert-only
-            # blocks append into their spare slots
-            rebuild_set = self._blocks_of(self.store.pdst[killed])
-            if sym:
-                rebuild_set = np.union1d(rebuild_set,
-                                         self._blocks_of(
-                                             self.store.psrc[killed]))
-            ins_rows = [(ip_dst // c, ip_src, ip_dst, self.store.w[ins_ids])]
-            if sym:
-                ins_rows.append((ip_src // c, ip_dst, ip_src,
-                                 self.store.w[ins_ids]))
+            # 2. per-block tile mutation. Deletes: in-place slot kills
+            # (masked holes — only the rows holding killed slots move);
+            # symmetric engines rebuild the touched blocks from truth
+            # instead, since a mirror slot of (s, d) is sig-identical to a
+            # base slot of (d, s). Inserts: append at the watermark, with
+            # a rebuild (= hole compaction, the store already holds this
+            # batch's inserts) when the watermark hits capacity.
             overflow = False
-            for b in rebuild_set:
-                if not self.tiles.rebuild(int(b),
-                                          *self.store.gather_block(int(b))):
-                    overflow = True
-                    break
-                rebuilt += 1
+            rebuild_set = empty
+            kill_set = empty
+            if killed.size:
+                if sym:
+                    rebuild_set = np.union1d(self._blocks_of(kpd),
+                                             self._blocks_of(kps))
+                    for b in rebuild_set:
+                        if not self.tiles.rebuild(
+                                int(b), *self.store.gather_block(int(b))):
+                            overflow = True
+                            break
+                        rebuilt += 1
+                else:
+                    kb = kpd // c
+                    kill_set = np.unique(kb)
+                    for b in kill_set:
+                        sel = kb == b
+                        self.tiles.kill(int(b), kps[sel],
+                                        kpd[sel] - int(b) * c)
+                    killed_blocks = int(kill_set.size)
+            ins_rows = [(ip_dst // c, ip_src, ip_dst, iw)]
+            if sym:
+                ins_rows.append((ip_src // c, ip_dst, ip_src, iw))
             append_set = np.setdiff1d(
                 np.unique(np.concatenate([blk for blk, *_ in ins_rows]))
-                if ins_ids.size else np.empty(0, np.int64), rebuild_set)
+                if ins_ids.size else empty, rebuild_set)
+            compacted: list[int] = []
             if not overflow:
                 for b in append_set:
                     asrc = np.concatenate(
@@ -193,42 +249,83 @@ class StreamingEngine:
                         [ed[blk == b] for blk, _, ed, _ in ins_rows])
                     aw = np.concatenate(
                         [ew[blk == b] for blk, _, _, ew in ins_rows])
-                    if not self.tiles.append(
+                    if self.tiles.append(
                             int(b), asrc.astype(np.int32),
                             (adst - int(b) * c).astype(np.int32), aw):
+                        appended += 1
+                    elif self.tiles.rebuild(
+                            int(b), *self.store.gather_block(int(b))):
+                        rebuilt += 1  # watermark full, holes reclaimed
+                        compacted.append(int(b))
+                    else:
                         overflow = True
                         break
-                    appended += 1
+            if compacted and kill_set.size:
+                # a kill-touched block whose append fell back to a rebuild
+                # is a rebuild, not in-place maintenance — count it once
+                kill_set = np.setdiff1d(
+                    kill_set, np.asarray(compacted, dtype=np.int64))
+                killed_blocks = int(kill_set.size)
 
             # 3. non-monotone deletions: KickStarter-style trimming before
             # the warm start (min/max programs cannot take a value back).
-            # Cold reference mode restarts from program.init, so it skips
-            # the trimming entirely.
-            if (self.stream.warm and prog.reset_on_delete is not None
-                    and killed.size):
-                g_new = self._internal_graph()
-                mask = np.asarray(prog.reset_on_delete(
-                    g_new, self._values, *killed_orig))
-                if mask.any():
-                    init_vals, _ = prog.init(g_new)
+            # The frontier closure is served straight from the EdgeStore's
+            # by-src buckets — no O(m) CSR rebuild per delete batch; the
+            # Graph-building hook remains only as a fallback for programs
+            # that predate the oracle interface. Cold reference mode
+            # restarts from program.init, so it skips trimming entirely.
+            if self.stream.warm and killed.size:
+                if prog.reset_on_delete_frontier is not None:
+                    mask = np.asarray(prog.reset_on_delete_frontier(
+                        self._successors, self.n, self._values,
+                        *killed_orig))
+                elif prog.reset_on_delete is not None:
+                    mask = np.asarray(prog.reset_on_delete(
+                        self._internal_graph(), self._values, *killed_orig))
+                else:
+                    mask = None
+                if mask is not None and mask.any():
                     self._values = self._values.copy()
-                    self._values[mask] = init_vals[mask]
+                    self._values[mask] = self._init_values[mask]
                     reset_blocks = self._blocks_of(
                         inv[np.flatnonzero(mask)])
                     n_reset = int(mask.sum())
 
-            # 4. aux refresh from the incremental degrees; blocks whose
-            # aggregates change because a SOURCE's aux changed (e.g. a
-            # vertex's out-degree splits its rank differently) are dirty
-            # even though their own storage did not move
-            aux_dirty = np.empty(0, dtype=np.int64)
-            if prog.aux_fn is not None:
-                aux_new = np.asarray(
-                    prog.aux_fn(self.out_deg, self.in_deg), dtype=np.float32)
-                changed = np.flatnonzero(aux_new != self._aux)
-                if changed.size and not overflow:
-                    aux_dirty = self.store.out_blocks_of(changed)
-                self._aux = aux_new
+            # 4. aux refresh from the incremental degrees — batched to the
+            # batch's own endpoints (aux_fn is elementwise, so only
+            # vertices whose degrees moved can change), never an O(n)
+            # rescan. A changed SOURCE aux silently changes the aggregates
+            # of its out-neighbour blocks; programs exposing aux_delta turn
+            # that into a finite PSD bump (scheduled by priority, skipped
+            # below the pruning floor) instead of an UNSEEN re-heat of
+            # nearly every block.
+            aux_dirty = empty
+            aux_bump = None
+            aux_changed = empty
+            aux_vals = np.empty(0, dtype=np.float32)
+            if prog.aux_fn is not None and not overflow and (
+                    killed.size or ins_ids.size):
+                cand = np.unique(np.concatenate(
+                    [kps, kpd, ip_src, ip_dst]))
+                a_new = np.asarray(prog.aux_fn(self.out_deg[cand],
+                                               self.in_deg[cand]),
+                                   dtype=np.float32)
+                ch = a_new != self._aux[cand]
+                aux_changed, aux_vals = cand[ch], a_new[ch]
+                if aux_changed.size:
+                    if prog.aux_delta is not None and prog.combine == "sum":
+                        dmsg = np.asarray(prog.aux_delta(
+                            self._values[plan.order[aux_changed]],
+                            self._aux[aux_changed], aux_vals))
+                        mass = self.store.out_block_mass(aux_changed, dmsg)
+                        # sound per-block bound: damping * (message-delta
+                        # mass entering the block) / C, the same form the
+                        # staleness coupling uses
+                        aux_bump = (prog.damping * mass / c).astype(
+                            np.float32)
+                    else:
+                        aux_dirty = self.store.out_blocks_of(aux_changed)
+                    self._aux[aux_changed] = aux_vals
 
             # 5. commit to the engine — inside the ingest timer, so both
             # the worst case (overflow -> full plan rebuild) and the
@@ -240,34 +337,58 @@ class StreamingEngine:
                 # partial appends/rebuilds made before the overflow were
                 # discarded with the old tiles — do not let them count as
                 # in-place maintenance
-                appended = rebuilt = 0
+                appended = rebuilt = killed_blocks = 0
                 self._rebuild_epoch()
-                plan = self.engine.plan
+                eng = self.engine
+                plan = eng.plan
                 dirty = np.ones(plan.num_blocks, dtype=bool)
                 is_hot = np.zeros(plan.num_blocks, dtype=bool)
                 is_hot[:plan.barrier_block] = True
                 psd0 = state_lib.init_psd(plan.num_blocks)
+                # the warm-values upload is billed where it happens (below)
+                bytes_up = eng.full_upload_bytes() - eng.values_nbytes
             else:
-                a2d = self.tiles.arrays2d()
-                eng.set_edge_data(aux=self._aux, **a2d)
-                eng.set_coupling(coupling_from_counts(self.W, prog, c))
-                eng.edge_counts = self.tiles.fill.copy()
+                # device-side incremental commit: scatter only the touched
+                # tile rows / changed aux entries / changed coupling rows
+                # into the resident (donated) buffers — O(touched), not
+                # O(m), host->device traffic
+                rows = self.tiles.pop_dirty_rows()
+                if rows.size:
+                    bytes_up += eng.update_edge_rows(
+                        rows, **self.tiles.rows2d(rows))
+                bytes_up += eng.update_aux(aux_changed, aux_vals)
+                if wrows.size:
+                    bytes_up += eng.update_coupling_rows(
+                        wrows, coupling_from_counts(self.W[wrows], prog, c))
+                eng.edge_counts = self.tiles.live.copy()
                 dirty = np.zeros(plan.num_blocks, dtype=bool)
-                for ids in (rebuild_set, append_set, aux_dirty,
+                for ids in (kill_set, rebuild_set, append_set, aux_dirty,
                             reset_blocks):
                     dirty[ids.astype(np.int64)] = True
                 is_hot = dirty.copy()
-                psd0 = state_lib.warm_psd(plan.num_blocks, dirty)
+                if aux_bump is not None:
+                    # bumped blocks are scheduled with hot priority (their
+                    # pending delta is known and front-loading it converges
+                    # in fewer sweeps) but stay out of the dirty set: they
+                    # carry a finite prunable PSD, not the UNSEEN re-heat
+                    is_hot |= aux_bump > 0
+                psd0 = state_lib.warm_psd(plan.num_blocks, dirty, aux_bump)
+
+            # 6. reclaim dead store rows — at the very END of ingest, after
+            # every use of this batch's edge ids (compaction renumbers
+            # rows, invalidating killed/ins_ids and anything derived)
+            self.store.maybe_compact()
 
         res = None
         with Timer() as t_run:
             if self.stream.warm:
-                if dirty.any():
+                if psd0.any():
                     vals_perm = self._values[self.engine.plan.order].astype(
                         np.float32)
                     res = self.engine.run(warm=WarmStart(
                         values=self.engine.pad_values(vals_perm),
                         psd=psd0, is_hot=is_hot))
+                    bytes_up += self.engine.values_nbytes
             else:
                 # reference mode: cold full recompute on the SAME mutated
                 # storage (program init values are structure-independent)
@@ -275,14 +396,19 @@ class StreamingEngine:
             if res is not None:
                 self._values = res.values
 
+        n_bumped = (int(((aux_bump > 0) & ~dirty).sum())
+                    if aux_bump is not None else 0)
         report = StreamBatchReport(
             inserts=batch.n_inserts, deletes=int(killed.size),
             dirty_blocks=int(dirty.sum()),
             num_blocks=int(self.engine.plan.num_blocks),
-            appended_blocks=appended, rebuilt_blocks=rebuilt,
+            appended_blocks=appended, killed_blocks=killed_blocks,
+            rebuilt_blocks=rebuilt, aux_bumped_blocks=n_bumped,
             plan_rebuild=bool(overflow), vertices_reset=n_reset,
             iterations=res.metrics.iterations if res else 0,
             edges_processed=res.metrics.edges_processed if res else 0,
+            bytes_uploaded=int(bytes_up),
+            bytes_full=int(self.engine.full_upload_bytes()),
             ingest_time_s=t_ing.elapsed, reconverge_time_s=t_run.elapsed,
             converged=res.metrics.converged if res else True)
         self._absorb(report)
@@ -321,6 +447,16 @@ class StreamingEngine:
         g = self.current_graph()
         return symmetrize(g) if self.program.needs_symmetric else g
 
+    def _successors(self, frontier: np.ndarray) -> tuple[np.ndarray,
+                                                         np.ndarray,
+                                                         np.ndarray]:
+        """Out-edge oracle over ORIGINAL vertex ids for the delete-reset
+        frontier closure, served from the EdgeStore's by-src buckets —
+        replaces the per-delete-batch ``from_edges`` CSR rebuild."""
+        plan = self.engine.plan
+        ps, pd, w = self.store.successors(plan.inv[frontier])
+        return plan.order[ps], plan.order[pd], w
+
     def _absorb(self, r: StreamBatchReport) -> None:
         m = self.metrics
         m.batches += 1
@@ -330,8 +466,16 @@ class StreamingEngine:
         m.edges_deleted += r.deletes
         m.edges_reprocessed += r.edges_processed
         m.iterations += r.iterations
-        m.dirty_blocks += r.dirty_blocks
-        m.blocks_seen += r.num_blocks
+        if not r.plan_rebuild:
+            # dirty_frac measures the in-place re-heat only: an overflow
+            # batch re-heats everything by construction and is tracked by
+            # plan_rebuilds instead of skewing the average
+            m.dirty_blocks += r.dirty_blocks
+            m.blocks_seen += r.num_blocks
         m.appended_blocks += r.appended_blocks
+        m.killed_blocks += r.killed_blocks
         m.rebuilt_blocks += r.rebuilt_blocks
+        m.aux_bumped_blocks += r.aux_bumped_blocks
         m.vertices_reset += r.vertices_reset
+        m.bytes_uploaded += r.bytes_uploaded
+        m.bytes_full += r.bytes_full

@@ -89,15 +89,17 @@ def test_incremental_tiles_match_cold_storage():
     t = se.tiles
     for b in range(plan.num_blocks):
         lo = int(t.slot_lo[b])
-        live = slice(lo, lo + int(t.fill[b]))
-        mine = sorted(zip(t.src[live], t.dstl[live], np.round(t.w[live], 5)))
+        mark = slice(lo, lo + int(t.fill[b]))
+        ok = t.valid[mark]  # in-place kills leave masked holes behind
+        mine = sorted(zip(t.src[mark][ok], t.dstl[mark][ok],
+                          np.round(t.w[mark][ok], 5)))
         c0 = int(cold.tile_start[b]) * cold.tile
         ref = slice(c0, c0 + int(cold.edges[b]))
         theirs = sorted(zip(cold.src.reshape(-1)[ref],
                             cold.dst_local.reshape(-1)[ref],
                             np.round(cold.w.reshape(-1)[ref], 5)))
         assert mine == theirs, f"block {b} diverged"
-    assert np.array_equal(t.fill, cold.edges)
+    assert np.array_equal(t.live, cold.edges)
 
 
 def test_incremental_degrees_and_coupling_counts():
@@ -244,6 +246,189 @@ def test_cc_delete_splits_component():
     cold = StructureAwareEngine(
         _mutated(g, [DeltaBatch.of(dels=[(3, 4)])], 1), A.cc(), CFG).run()
     assert _close(se.values, cold.values, atol=1e-6)
+
+
+# -- sub-O(m) ingest: uploads, compaction ordering, delete semantics ---------
+def test_upload_bytes_scale_with_touched_blocks():
+    """Tentpole: a small batch's host->device payload covers the touched
+    tile rows (plus changed aux entries / coupling rows / warm values),
+    never the full edge arrays."""
+    g = G.powerlaw_graph(6000, avg_deg=8, seed=3, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    s, d, _ = G.edges_of(g)
+    batch = DeltaBatch.of(ins=[(0, 1), (17, 33)],
+                          dels=[(int(s[0]), int(d[0]))])
+    rep = se.ingest(batch)
+    assert not rep.plan_rebuild
+    assert 0 < rep.bytes_uploaded < 0.25 * rep.bytes_full
+    assert rep.upload_frac < 0.25
+    assert se.metrics.bytes_uploaded == rep.bytes_uploaded
+    assert se.metrics.bytes_full == rep.bytes_full
+
+
+def test_aux_change_rearms_without_reheat():
+    """An insert changes its source's out-degree, which silently changes
+    the aggregates of the source's OTHER out-neighbour blocks. Those
+    blocks are re-armed with a finite PSD bump (aux_bumped_blocks) and
+    still reconverge to the cold fixpoint — but only blocks whose storage
+    actually moved count as dirty re-heat."""
+    g = G.powerlaw_graph(3000, avg_deg=6, seed=5, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    s, _, _ = G.edges_of(g)
+    u = int(np.argmax(np.bincount(s, minlength=g.n)))  # heavy out-degree
+    batch = DeltaBatch.of(ins=[(u, (u + 1) % g.n)])
+    rep = se.ingest(batch)
+    assert rep.dirty_blocks <= 2  # the receiving block, not the fan-out
+    assert rep.aux_bumped_blocks > 0
+    cold = StructureAwareEngine(_mutated(g, [batch], 1), A.pagerank(),
+                                CFG).run()
+    assert _close(se.values, cold.values, rtol=1e-4, atol=1e-5)
+
+
+def test_compaction_same_batch_as_deletes():
+    """EdgeStore compaction fires at the END of an ingest whose deletes
+    leave dead rows in the majority — in the same batch as the deletes,
+    after every use of the batch's edge ids — and the incremental state
+    stays equal to the cold truth through it and past it."""
+    g = G.powerlaw_graph(400, avg_deg=8, seed=11, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    s, d, _ = G.edges_of(g)
+    keys = np.unique(s * g.n + d)
+    kill = keys[:int(keys.size * 0.7)]
+    batches = [DeltaBatch(ins_src=[1, 2, 3], ins_dst=[4, 5, 6],
+                          ins_w=np.ones(3, np.float32),
+                          del_src=kill // g.n, del_dst=kill % g.n),
+               DeltaBatch.of(ins=[(7, 8), (9, 10)], dels=[(1, 4)])]
+    m_before = se.store.m
+    rep = se.ingest(batches[0])
+    assert rep.deletes >= kill.size
+    assert se.store.m == se.store.n_live  # compacted in the delete batch
+    assert se.store.m < m_before
+    se.ingest(batches[1])  # ids from the compacted store still line up
+    cold = StructureAwareEngine(_mutated(g, batches, 2), A.pagerank(),
+                                CFG).run()
+    assert _close(se.values, cold.values, rtol=1e-4, atol=1e-5)
+
+
+def test_multi_copy_delete_kills_all_copies():
+    """Pair-granular delete semantics, pinned: one delete of a duplicated
+    (src, dst) pair removes EVERY live parallel copy — exactly what the
+    apply_to_coo cold truth does — including copies inserted through the
+    streaming path itself."""
+    n = 64
+    src = np.concatenate([np.arange(n - 1), [5, 5]])  # chain + 2 dup copies
+    dst = np.concatenate([np.arange(1, n), [6, 6]])  # of the (5, 6) edge
+    g = G.from_edges(n, src, dst)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    batch = DeltaBatch.of(dels=[(5, 6)])
+    rep = se.ingest(batch)
+    assert rep.deletes == 3
+    cs, cd, _ = G.edges_of(se.current_graph())
+    assert not np.any((cs == 5) & (cd == 6))
+    cold = StructureAwareEngine(_mutated(g, [batch], 1), A.pagerank(),
+                                CFG).run()
+    assert _close(se.values, cold.values, rtol=1e-4, atol=1e-5)
+    # fresh duplicates inserted incrementally die together the same way
+    se.ingest(DeltaBatch.of(ins=[(5, 6), (5, 6)]))
+    rep = se.ingest(DeltaBatch.of(dels=[(5, 6)]))
+    assert rep.deletes == 2
+
+
+def test_plan_rebuild_excluded_from_dirty_frac():
+    """An overflow batch re-heats everything by construction; it must not
+    inflate the in-place dirty average (satellite of the honest-metrics
+    fix): StreamMetrics tracks it via plan_rebuilds instead."""
+    g = G.powerlaw_graph(300, avg_deg=4, seed=1)
+    se = StreamingEngine(g, A.pagerank(), CFG,
+                         StreamConfig(tile_slack=0.0, spare_tiles=0))
+    batch = DeltaBatch(ins_src=np.arange(250) % g.n,
+                       ins_dst=np.full(250, 7),
+                       ins_w=np.ones(250, np.float32),
+                       del_src=[], del_dst=[])
+    rep = se.ingest(batch)
+    assert rep.plan_rebuild and rep.dirty_frac == 1.0
+    assert rep.upload_frac == 1.0  # full re-upload, honestly billed
+    m = se.metrics
+    assert m.plan_rebuilds == 1
+    assert m.dirty_blocks == 0 and m.blocks_seen == 0
+    rep2 = se.ingest(DeltaBatch.of(ins=[(0, 1)]))
+    assert not rep2.plan_rebuild
+    assert m.blocks_seen == rep2.num_blocks
+    assert m.dirty_blocks == rep2.dirty_blocks
+
+
+def test_edge_store_successors_match_csr():
+    """The EdgeStore-served out-edge oracle (reset_on_delete_frontier's
+    backend) agrees with the cold CSR oracle on the mutated graph."""
+    from repro.core.algorithms import graph_successors
+    g = G.powerlaw_graph(400, avg_deg=5, seed=9, weighted=True)
+    se = StreamingEngine(g, A.sssp(0), CFG)
+    batch = synthetic_stream(g, 1, 50, seed=2, delete_frac=0.4,
+                             weighted=True)[0]
+    se.ingest(batch)
+    succ_g = graph_successors(se.current_graph())
+    rng = np.random.default_rng(0)
+    def norm(tri):
+        return sorted(zip(tri[0].tolist(), tri[1].tolist(),
+                          np.round(np.asarray(tri[2], np.float64),
+                                   5).tolist()))
+
+    for _ in range(5):
+        frontier = np.unique(rng.integers(0, g.n, 20))
+        assert norm(se._successors(frontier)) == norm(succ_g(frontier))
+
+
+@given(seed=st.integers(0, 30), symmetric=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_edge_store_invariants_under_churn(seed, symmetric):
+    """EdgeStore invariants under random insert/delete/compact churn: the
+    buckets always equal a fresh rebucketing of the live rows, n_live
+    matches the alive mask, and gather_block matches a brute-force filter
+    (base + mirror rows for symmetric stores)."""
+    from repro.stream.apply import EdgeStore
+    rng = np.random.default_rng(seed)
+    n, nb, c = 96, 6, 16
+    m0 = int(rng.integers(50, 1500))
+    store = EdgeStore(rng.integers(0, n, m0), rng.integers(0, n, m0),
+                      rng.random(m0).astype(np.float32), n, num_blocks=nb,
+                      block_size=c, symmetric=symmetric)
+    for _ in range(6):
+        op = int(rng.integers(3))
+        if op == 0:
+            k = int(rng.integers(1, 120))
+            store.insert(rng.integers(0, n, k), rng.integers(0, n, k),
+                         rng.random(k).astype(np.float32))
+        elif op == 1 and store.n_live:
+            live = np.flatnonzero(store.alive[:store.m])
+            pick = live[rng.integers(0, live.size,
+                                     min(40, live.size))]
+            store.kill_pairs(store.psrc[pick], store.pdst[pick])
+        else:
+            store.maybe_compact()
+
+        assert store.n_live == int(store.alive[:store.m].sum())
+        alive = store.alive[:store.m]
+        for b in range(nb):
+            for buckets, key in ((store.by_dst, store.pdst),
+                                 (store.by_src, store.psrc)):
+                ids = buckets[b]
+                ids = ids[store.alive[ids]]
+                ref = np.flatnonzero(alive & (key[:store.m] // c == b))
+                assert set(ids.tolist()) == set(ref.tolist())
+            esrc, edstl, ew = store.gather_block(b)
+            got = sorted(zip(esrc.tolist(), edstl.tolist(),
+                             np.round(ew, 5).tolist()))
+            ref = np.flatnonzero(alive & (store.pdst[:store.m] // c == b))
+            exp = list(zip(store.psrc[ref], store.pdst[ref] - b * c,
+                           np.round(store.w[ref], 5)))
+            if symmetric:
+                mref = np.flatnonzero(alive
+                                      & (store.psrc[:store.m] // c == b))
+                exp += list(zip(store.pdst[mref],
+                                store.psrc[mref] - b * c,
+                                np.round(store.w[mref], 5)))
+            exp = sorted((int(a), int(dl), float(ww)) for a, dl, ww in exp)
+            assert [(int(a), int(dl), float(ww)) for a, dl, ww in got] == exp
 
 
 def test_stream_metrics_accumulate():
