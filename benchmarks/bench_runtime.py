@@ -54,11 +54,13 @@ def run(n: int = 20000):
                 f"io_gain={mb.bytes_loaded/max(ms.bytes_loaded,1):.2f}x"))
         # fused vs host-driven loop (device-resident superstep tentpole):
         # steady-state us/iteration with the per-iteration host round-trip
-        # eliminated. Both paths are warmed first so compile time does not
-        # pollute the ratio; the host loop is iteration-capped because a
-        # full host-driven convergence run IS the slow thing being removed.
+        # eliminated. Both paths are warmed first (incl. every adaptive
+        # dispatch-width bucket) so compile time does not pollute the
+        # ratio; the host loop is iteration-capped because a full
+        # host-driven convergence run IS the slow thing being removed.
         eng = StructureAwareEngine(g, A.pagerank(), cfg)
-        eng.run(max_iterations=2)                # compile the fused chunk
+        eng.prewarm_buckets()                    # compile all width buckets
+        eng.run(max_iterations=2)                # warm the fused entry path
         eng.run(max_iterations=2, fused=False)   # compile the host-loop fns
         fast = eng.run(max_iterations=32)
         slow = eng.run(max_iterations=8, fused=False)
@@ -71,6 +73,21 @@ def run(n: int = 20000):
                      f"speedup_vs_hostloop={us_h / max(us_f, 1e-9):.2f}x"))
         rows.append((f"runtime/{gname}/pagerank/sa_host_loop", us_h,
                      f"iters={slow.metrics.iterations};capped=True"))
+        # cold full-run time-to-convergence on the warmed engine: the
+        # adaptive active-set claim (retirement + shrinking width + depth
+        # ladder) pays off in the TAIL iterations, which the 32-iteration
+        # cap above never reaches. us_per_call = full wall time.
+        full = eng.run()
+        mf = full.metrics
+        rows.append((
+            f"runtime/{gname}/pagerank/sa_fused_full",
+            mf.wall_time_s * 1e6,
+            f"iters={mf.iterations};converged={mf.converged};"
+            f"updates={mf.updates};retired={mf.blocks_retired};"
+            f"mean_width={mf.mean_dispatch_width:.1f};"
+            "depth_hist=" + "|".join(
+                f"{d}:{c}" for d, c in sorted(mf.inner_depth_hist.items(),
+                                              reverse=True))))
         # BC (sampled sources)
         bc_b, m_b = betweenness(g, [0, 1], cfg, structure_aware=False)
         bc_s, m_s = betweenness(g, [0, 1], cfg, structure_aware=True)

@@ -5,7 +5,41 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import platform
 import sys
+
+
+def _host_meta(repeats: int) -> dict:
+    """Host metadata recorded next to the timing rows: cross-PR comparisons
+    on shared/small boxes are only meaningful when the host (and the
+    best-of-K protocol) is pinned alongside the numbers."""
+    import jax
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+        "jax": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "repeats": repeats,
+        "timing": "best-of-%d per row (min us_per_call)" % repeats,
+    }
+
+
+def _merge_best(attempts: list[list[tuple]]) -> list[tuple]:
+    """Best-of-K merge: keep each row at its minimum us_per_call (derived
+    travels with the winning repeat). Row order follows the first attempt;
+    rows that only appear in later repeats are appended."""
+    order: list[str] = []
+    best: dict[str, tuple] = {}
+    for rows in attempts:
+        for name, us, derived in rows:
+            if name not in best:
+                order.append(name)
+                best[name] = (name, us, derived)
+            elif us < best[name][1]:
+                best[name] = (name, us, derived)
+    return [best[name] for name in order]
 
 
 def main() -> None:
@@ -15,9 +49,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: runtime,convergence,io,kernels,"
                          "streaming")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="run each suite K times and keep the best "
+                         "us_per_call per row — damps the ~±15%% run noise "
+                         "of small shared boxes")
     ap.add_argument("--json", action="store_true",
-                    help="write BENCH_runtime.json (suite, name, "
-                         "us_per_call) next to the CSV output")
+                    help="write BENCH_runtime.json ({meta, rows}) next to "
+                         "the CSV output")
     args = ap.parse_args()
 
     from benchmarks import (bench_convergence, bench_io, bench_kernels,
@@ -34,25 +72,44 @@ def main() -> None:
         # the bytes-loaded trajectory is tracked across PRs: a JSON payload
         # without the I/O table rows silently drops it
         pick.append("io")
+    repeats = max(args.repeats, 1)
     print("name,us_per_call,derived")
     ok = True
     records = []
     for key in pick:
-        try:
-            rows = suites[key]()
-        except ImportError:
-            # a suite that cannot even import is a broken harness, not a
-            # data point — fail loudly instead of emitting an ERROR row
-            raise
-        except Exception as e:  # noqa: BLE001
+        attempts: list[list[tuple]] = []
+        err = None
+        for _ in range(repeats):
+            try:
+                attempts.append(suites[key]())
+            except ImportError:
+                # a suite that cannot even import is a broken harness, not
+                # a data point — fail loudly instead of emitting an ERROR
+                # row
+                raise
+            except Exception as e:  # noqa: BLE001
+                err = e
+                break
+        if err is not None and not attempts:
             ok = False
-            print(f"{key},-1,ERROR:{e!r}")
+            print(f"{key},-1,ERROR:{err!r}")
             # keep the failure in-band in the JSON payload too: a suite's
             # rows silently vanishing would read as a perf change
             records.append({"suite": key, "name": key, "us_per_call": -1,
-                            "derived": f"ERROR:{e!r}"})
+                            "derived": f"ERROR:{err!r}"})
             continue
-        for name, us, derived in rows:
+        if err is not None:
+            # a repeat died after others succeeded: the merged rows are
+            # best-of-fewer than advertised — record that in-band so a
+            # later reader of the committed JSON sees it, not just CI
+            ok = False
+            print(f"{key},-1,ERROR(partial):{err!r}", file=sys.stderr)
+            records.append({
+                "suite": key, "name": f"{key}/__partial_error",
+                "us_per_call": -1,
+                "derived": (f"ERROR(best-of-{len(attempts)} only, "
+                            f"repeat {len(attempts) + 1} died):{err!r}")})
+        for name, us, derived in _merge_best(attempts):
             print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
             records.append({"suite": key, "name": name,
@@ -60,7 +117,8 @@ def main() -> None:
                             "derived": derived})
     if args.json:
         with open("BENCH_runtime.json", "w") as f:
-            json.dump(records, f, indent=1)
+            json.dump({"meta": _host_meta(repeats), "rows": records}, f,
+                      indent=1)
         print(f"wrote BENCH_runtime.json ({len(records)} rows)",
               file=sys.stderr)
     if not ok:

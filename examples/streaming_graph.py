@@ -40,13 +40,19 @@ def main():
     batches = synthetic_stream(g, args.batches, args.batch_size, seed=3,
                                delete_frac=0.2, weighted=True)
     print(f"\n{'batch':>5s} {'+ins':>5s} {'-del':>5s} {'dirty':>9s} "
+          f"{'width':>6s} {'retired':>8s} "
           f"{'warm edges':>11s} {'cold edges':>11s} {'warm ms':>8s} "
           f"{'cold ms':>8s}")
     for i, b in enumerate(batches):
         rw = warm.ingest(b)
         rc = cold.ingest(b)
+        # width/retired: the adaptive active set at work — a small batch
+        # reconverges in a narrow dispatch bucket and ends with most
+        # blocks individually retired, so effort shrinks with batch size
         print(f"{i:5d} {rw.inserts:5d} {rw.deletes:5d} "
               f"{rw.dirty_blocks:3d}/{rw.num_blocks:<3d}   "
+              f"{rw.mean_dispatch_width:6.1f} "
+              f"{rw.blocks_retired:3d}/{rw.num_blocks:<3d} "
               f"{rw.edges_processed:11d} {rc.edges_processed:11d} "
               f"{rw.latency_s * 1e3:8.1f} {rc.latency_s * 1e3:8.1f}")
 
@@ -59,7 +65,10 @@ def main():
           f"{mc.latency_per_batch_s / max(mw.latency_per_batch_s, 1e-9):.2f}x "
           f"faster per batch, mean dirty fraction {mw.dirty_frac:.2f} "
           f"({mw.appended_blocks} in-place appends, {mw.rebuilt_blocks} "
-          f"block rebuilds, {mw.plan_rebuilds} plan rebuilds)")
+          f"block rebuilds, {mw.plan_rebuilds} plan rebuilds); "
+          f"mean dispatch width {mw.mean_dispatch_width:.1f} "
+          f"of {warm.engine.config.width}, hot-depth histogram "
+          f"{dict(sorted(mw.inner_depth_hist.items(), reverse=True))}")
 
 
 if __name__ == "__main__":

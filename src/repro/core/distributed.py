@@ -58,9 +58,13 @@ class DistributedEngine(StructureAwareEngine):
         self.ndev = self.mesh.shape[axis]
         bpd = blocks_per_device or max(1, config.width // self.ndev)
         # shard_map dispatch is host-driven (fused=False): the mesh routing
-        # happens per call, not inside a device-resident while_loop.
+        # happens per call, not inside a device-resident while_loop. The
+        # adaptive active-set model is disabled: the dispatch width IS the
+        # mesh (devices x blocks-per-device) — shrinking it would idle
+        # devices, and the per-rank depth ladder would skew the round-robin
+        # load balance this engine relies on.
         config = dataclasses.replace(config, width=self.ndev * bpd,
-                                     fused=False)
+                                     fused=False, adaptive=False)
         self.bpd = bpd
         super().__init__(graph, program, config)
 
@@ -138,8 +142,11 @@ class DistributedEngine(StructureAwareEngine):
         return fn
 
     def _dispatch(self, values, psd, dmax, block_ids: np.ndarray,
-                  sequential: bool):
-        """Pad selection to (ndev * bpd) slots, round-robin across devices."""
+                  sequential: bool, width: int | None = None):
+        """Pad selection to (ndev * bpd) slots, round-robin across devices.
+        ``width`` is accepted for base-class compatibility and ignored —
+        the mesh fixes this engine's dispatch width (adaptive is pinned
+        off in __init__)."""
         p, w = self.plan, self.ndev * self.bpd
         for store_key, cond in (("hot", block_ids < p.barrier_block),
                                 ("cold", block_ids >= p.barrier_block)):

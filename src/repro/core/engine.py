@@ -51,6 +51,34 @@ block->affected-blocks adjacency once (host, O(m)) and bump downstream PSDs
 after each iteration. Without this, min/max programs can terminate with
 stale values; with it, every engine run reaches the same fixpoint as the
 synchronous baseline (tested property), fused or host-driven.
+
+Adaptive active-set execution (``EngineConfig.adaptive``, default on). The
+paper's "low-activity vertices are computed less often, high-status
+partitions more deeply" is made concrete with three mechanisms, applied
+identically by the fused and host paths (decision parity is property
+tested):
+
+  * **block-local convergence flags** — a per-block ``calm`` counter
+    (device state, updated in the staleness post) counts consecutive
+    supersteps under the scheduler's pruning floor; ``calm >=
+    retire_after`` retires the block from the *active set*. A
+    staleness-coupling or aux bump that lifts the block's PSD back over
+    the floor resets calm and re-arms it.
+  * **priority-scaled inner depth** — hot slot i (PSD rank i) runs
+    ``max(1, hot_inner_iters >> i)`` block-local Gauss-Seidel passes:
+    deep async iteration is spent on the top of the hot queue, not on
+    every scheduled block.
+  * **shrinking dispatch width** — the fused chunk is compiled per
+    dispatch-width bucket (powers of two down from ``cfg.width``); at
+    each repartition boundary the host picks the bucket covering the live
+    active set (non-retired blocks), so tail supersteps stop paying
+    full-width sweeps over padded slots. Warm streaming restarts seed
+    ``calm`` so only the perturbed blocks are active — a small delta
+    batch starts narrow (see ``WarmStart.calm`` / ``WarmStart.i2``).
+
+``adaptive=False`` restores the fixed-slate dispatch (constant width,
+constant inner depth, floor-prune only) with the exact pre-adaptive
+trajectory.
 """
 from __future__ import annotations
 
@@ -69,7 +97,8 @@ from repro.core.metrics import Metrics, Timer, block_io_bytes
 from repro.core.partition import (EdgeStorage, PartitionPlan, TiledStorage,
                                   build_plan)
 from repro.core.repartition import RepartitionState
-from repro.core.schedule import Scheduler, Selection, make_device_select
+from repro.core.schedule import (Scheduler, Selection, make_device_select,
+                                 pick_width, width_ladder)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +118,9 @@ class EngineConfig:
     stale_eps: float = 1e-12  # PSD above this marks downstream blocks dirty
     use_pallas: bool = False  # sum-combine via the Pallas spmv kernel
     fused: bool = True  # device-resident lax.while_loop superstep
+    adaptive: bool = True  # active-set execution (False = fixed-slate)
+    retire_after: int = 3  # consecutive sub-floor supersteps before retire
+    min_width: int = 2  # narrowest dispatch-width bucket
     tile_slack: float = 0.0  # spare tile capacity per block (streaming)
     spare_tiles: int = 0  # flat extra tiles per block (streaming)
     keep_dead_blocks: bool = False  # dead vertices get block slots (streaming)
@@ -111,11 +143,19 @@ class WarmStart:
     ``state.warm_psd``); ``is_hot`` is the dirty mask — warm runs always
     repartition in universal mode, since an arbitrary dirty set is not a
     prefix barrier.
+
+    Adaptive extras (both ignored when ``config.adaptive`` is off):
+    ``calm`` seeds the block-local convergence counters (see
+    ``state.warm_calm``) so a small perturbation starts in a narrow
+    dispatch bucket; ``i2`` overrides the cold-admission cadence for this
+    run (``schedule.adaptive_i2`` scales it with the batch size).
     """
 
     values: np.ndarray
     psd: np.ndarray
     is_hot: np.ndarray
+    calm: np.ndarray | None = None
+    i2: int | None = None
 
 
 class EdgeData(NamedTuple):
@@ -301,6 +341,9 @@ class StructureAwareEngine:
         self._coupling_dev = jnp.asarray(self._coupling)
         self._post = jax.jit(self._make_post())
         self._fns: dict = {}
+        # descending dispatch-width buckets; the host picks per boundary
+        self._ladder = (width_ladder(config.width, config.min_width)
+                        if config.adaptive else [config.width])
 
     # -- one-time host preprocessing ---------------------------------------
     def _init_dead(self):
@@ -354,14 +397,60 @@ class StructureAwareEngine:
 
     def _make_post(self):
         eps = self.config.stale_eps
+        floor = self._psd_floor()
 
-        def post(coupling, psd, dmax):
-            """Consume dmax: re-arm downstream blocks, then reset."""
+        def post(coupling, psd, dmax, calm):
+            """Consume dmax: re-arm downstream blocks, then reset. Also
+            advances the block-local convergence counters: a superstep
+            spent under the pruning floor increments ``calm``; any PSD at
+            or over the floor (own activity OR an incoming bump) resets it
+            — the retire/re-arm hysteresis of the adaptive active set."""
             d = jnp.where(dmax > eps, dmax, 0.0)
             bump = jnp.max(d[:, None] * coupling, axis=0)
             psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
-            return psd, jnp.zeros_like(dmax)
+            calm = jnp.where(psd < floor, calm + 1, 0).astype(jnp.int32)
+            return psd, jnp.zeros_like(dmax), calm
         return post
+
+    def _psd_floor(self) -> float:
+        """Per-block pruning floor (t2/P): skipping blocks below it is safe
+        — if every block were below it, SUM(psd) < t2 and we are converged.
+        The ONE definition shared by the scheduler's live test and the
+        calm/retire counters, so they can never disagree."""
+        return self.config.t2 / max(self.plan.num_blocks, 1)
+
+    def _inner_depths(self, width: int) -> np.ndarray:
+        """Per-slot Gauss-Seidel depth for the hot sweep, by PSD rank:
+        slot 0 (the hottest block) runs the full ``hot_inner_iters``,
+        halving per rank down to 1 — deep async iteration is spent where
+        the delta mass is, not on every scheduled block. Dense mode keeps
+        the constant depth. Depth depends only on the absolute slot index,
+        so host and fused ranks (and every width bucket) agree."""
+        t = max(self.config.hot_inner_iters, 1)
+        if not self.config.adaptive:
+            return np.full(width, t, dtype=np.int32)
+        return np.maximum(1, t >> np.minimum(np.arange(width), 30)) \
+            .astype(np.int32)
+
+    def _pick_width(self, active: int, psd_host: np.ndarray) -> int:
+        """Dispatch bucket for the live active-set size (non-retired
+        blocks), chosen by the host at repartition boundaries. While an
+        UNSEEN re-heat wave is still in flight the bucket gets 2x headroom:
+        unprocessed blocks are about to re-arm their neighbourhood through
+        the staleness coupling, and a bucket that exactly covers today's
+        active set throttles that propagation (measured: more supersteps at
+        barely-lower per-superstep cost). Once the wave has passed, the
+        active count is trustworthy and the tail narrows for real."""
+        if not self.config.adaptive:
+            return self.config.width
+        if bool((psd_host >= state_lib.UNSEEN).any()):
+            active *= 2
+        return pick_width(self._ladder, active)
+
+    def _active_count(self, calm_host: np.ndarray) -> int:
+        if not self.config.adaptive:
+            return self.plan.num_blocks
+        return int((calm_host < self.config.retire_after).sum())
 
     def _acct_table(self) -> np.ndarray:
         """(P, len(COUNTER_FIELDS)) host-side accounting row per schedule of
@@ -537,15 +626,16 @@ class StructureAwareEngine:
                 plan.n_live, plan.graph.n, cfg.use_pallas)
         return self._proc
 
-    def _sweeps(self):
+    def _sweeps(self, width: int | None = None):
         """(hot_sweep, cold_sweep): the two dispatch bodies, shared at trace
         time by the host-loop fns and the fused superstep so the semantics
         cannot diverge. Both take (ed, values, psd, dmax, rows, ok) with
-        (W,) block-id slots; hot is sequential (async, each block sees
-        earlier writes), cold reads one snapshot (sync)."""
+        (width,) block-id slots; hot is sequential (async, each block sees
+        earlier writes) with a per-rank inner depth, cold reads one
+        snapshot (sync)."""
         cfg, plan = self.config, self.plan
-        width = cfg.width
-        t_inner = max(cfg.hot_inner_iters, 1)
+        width = cfg.width if width is None else width
+        depths = jnp.asarray(self._inner_depths(width))
         process_one, process_iterated, gids = self._processor()
         write_one = self._write_one(plan.block_size)
 
@@ -554,7 +644,7 @@ class StructureAwareEngine:
                 values, psd, dmax = carry
                 row = rows[i]
                 base, new, psd_val, dmax_val = process_iterated(
-                    ed, values, row, t_inner)
+                    ed, values, row, depths[i])
                 return write_one(values, psd, dmax, base, new, psd_val,
                                  dmax_val, gids[row], ok[i])
             return lax.fori_loop(0, width, body, (values, psd, dmax))
@@ -584,11 +674,12 @@ class StructureAwareEngine:
             return values, psd, dmax
         return write_one
 
-    def _get_fn(self, sequential: bool) -> Callable:
-        key = ("unified", sequential)
+    def _get_fn(self, sequential: bool, width: int | None = None) -> Callable:
+        width = self.config.width if width is None else width
+        key = ("unified", sequential, width)
         if key in self._fns:
             return self._fns[key]
-        hot_sweep, cold_sweep = self._sweeps()
+        hot_sweep, cold_sweep = self._sweeps(width)
         fn = jax.jit(hot_sweep if sequential else cold_sweep,
                      donate_argnums=(1, 2, 3))
         self._fns[key] = fn
@@ -596,16 +687,19 @@ class StructureAwareEngine:
 
     # -- host-side dispatch (run(fused=False) reference path) ---------------
     def _dispatch(self, values, psd, dmax, block_ids: np.ndarray,
-                  sequential: bool):
-        """Run the selected blocks through the unified processor."""
-        w = self.config.width
+                  sequential: bool, width: int | None = None):
+        """Run the selected blocks through the unified processor, padded to
+        the given dispatch bucket (the adaptive host loop passes its
+        current bucket; default is the configured width). Slot index ==
+        PSD rank, which is what the hot sweep's depth ladder keys on."""
+        w = self.config.width if width is None else width
         for at in range(0, block_ids.size, w):
             chunk = block_ids[at:at + w]
             rows = np.zeros(w, dtype=np.int32)
             ok = np.zeros(w, dtype=bool)
             rows[:chunk.size] = chunk.astype(np.int32)
             ok[:chunk.size] = True
-            fn = self._get_fn(sequential)
+            fn = self._get_fn(sequential, w)
             values, psd, dmax = fn(self._ed, values, psd, dmax,
                                    jnp.asarray(rows), jnp.asarray(ok))
         return values, psd, dmax
@@ -621,63 +715,92 @@ class StructureAwareEngine:
             metrics.edges_processed += e
 
     # -- fused device-resident loop -----------------------------------------
-    def _get_chunk(self) -> Callable:
+    def _get_chunk(self, width: int | None = None) -> Callable:
         """Jitted multi-iteration chunk: lax.while_loop over fused
         supersteps (schedule -> hot -> cold -> staleness post -> convergence
         test), stopping at the iteration cap, at convergence, or when the
         schedule goes empty. The host supplies the (constant within a
-        chunk) hot/cold labels and consumes one psd/counters sync per call.
-        """
-        if "chunk" in self._fns:
-            return self._fns["chunk"]
+        chunk) hot/cold labels, the dispatch-width bucket (one compiled
+        chunk per bucket — ``width`` keys the cache), and the traced
+        cold-admission cadence ``i2``; it consumes one
+        psd/calm/counters sync per call."""
+        width = self.config.width if width is None else width
+        key = ("chunk", width)
+        if key in self._fns:
+            return self._fns[key]
         cfg, plan = self.config, self.plan
         t2 = cfg.t2
-        hot_sweep, cold_sweep = self._sweeps()
+        hot_sweep, cold_sweep = self._sweeps(width)
         post = self._make_post()
         tile_cnt = plan.unified.tile_cnt
         select = make_device_select(
-            width=cfg.width, i2=cfg.i2, cold_frac=cfg.cold_frac,
-            min_psd=cfg.t2 / max(plan.num_blocks, 1),
+            width=width, cold_frac=cfg.cold_frac,
+            min_psd=self._psd_floor(),
             pad_id=int(np.argmin(tile_cnt)) if tile_cnt.size else 0)
 
-        def superstep(it, ed, coupling, values, psd, dmax, counts, is_hot):
-            hot_rows, hot_ok, cold_rows, cold_ok = select(it, psd, is_hot)
+        def superstep(it, i2, ed, coupling, values, psd, dmax, calm, counts,
+                      hslots, is_hot):
+            hot_rows, hot_ok, cold_rows, cold_ok = select(it, i2, psd,
+                                                          is_hot)
             values, psd, dmax = hot_sweep(ed, values, psd, dmax, hot_rows,
                                           hot_ok)
             values, psd, dmax = cold_sweep(ed, values, psd, dmax, cold_rows,
                                            cold_ok)
             counts = counts.at[hot_rows].add(hot_ok.astype(jnp.int32))
             counts = counts.at[cold_rows].add(cold_ok.astype(jnp.int32))
-            psd, dmax = post(coupling, psd, dmax)  # staleness propagation
+            hslots = hslots + hot_ok.astype(jnp.int32)  # depth-hist feed
+            # staleness propagation + calm/retire counter advance
+            psd, dmax, calm = post(coupling, psd, dmax, calm)
             scheduled = hot_ok.any() | cold_ok.any()
-            return values, psd, dmax, counts, scheduled
+            return values, psd, dmax, calm, counts, hslots, scheduled
 
-        def chunk(ed, coupling, values, psd, dmax, counts, it0, it_end,
-                  is_hot):
+        def chunk(ed, coupling, values, psd, dmax, calm, counts, hslots,
+                  it0, it_end, is_hot, i2):
             def cond(carry):
-                it, _, _, _, _, done = carry
+                it, _, _, _, _, _, _, done = carry
                 return (it < it_end) & jnp.logical_not(done)
 
             def body(carry):
-                it, values, psd, dmax, counts, _ = carry
-                values, psd, dmax, counts, scheduled = superstep(
-                    it, ed, coupling, values, psd, dmax, counts, is_hot)
+                it, values, psd, dmax, calm, counts, hslots, _ = carry
+                values, psd, dmax, calm, counts, hslots, scheduled = \
+                    superstep(it, i2, ed, coupling, values, psd, dmax,
+                              calm, counts, hslots, is_hot)
                 conv = state_lib.converged_device(psd, t2)
                 # empty schedule: no iteration happened (host parity: the
                 # reference loop breaks before processing)
                 it = it + jnp.where(scheduled, 1, 0).astype(it.dtype)
                 done = conv | jnp.logical_not(scheduled)
-                return it, values, psd, dmax, counts, done
+                return it, values, psd, dmax, calm, counts, hslots, done
 
-            it, values, psd, dmax, counts, _ = lax.while_loop(
+            it, values, psd, dmax, calm, counts, hslots, _ = lax.while_loop(
                 cond, body,
-                (it0, values, psd, dmax, counts, jnp.bool_(False)))
-            return (it, values, psd, dmax, counts,
+                (it0, values, psd, dmax, calm, counts, hslots,
+                 jnp.bool_(False)))
+            return (it, values, psd, dmax, calm, counts, hslots,
                     state_lib.converged_device(psd, t2))
 
-        fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5))
-        self._fns["chunk"] = fn
+        fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5, 6, 7))
+        self._fns[key] = fn
         return fn
+
+    def prewarm_buckets(self) -> list[int]:
+        """Compile the fused chunk for every dispatch-width bucket with a
+        zero-length run (it_end == it0: the while_loop body never fires),
+        so a long-lived caller (streaming, benchmarks) never pays a bucket
+        compile inside a measured batch/run. Returns the widths warmed."""
+        p = self.plan
+        for wb in self._ladder:
+            fn = self._get_chunk(wb)
+            fn(self._ed, self._coupling_dev,
+               jnp.zeros(self._values_len, jnp.float32),
+               jnp.zeros(p.num_blocks, jnp.float32),
+               jnp.zeros(p.num_blocks, jnp.float32),
+               jnp.zeros(p.num_blocks, jnp.int32),
+               jnp.zeros(p.num_blocks, jnp.int32),
+               jnp.zeros(wb, jnp.int32), jnp.int32(0), jnp.int32(0),
+               jnp.zeros(p.num_blocks, dtype=bool),
+               jnp.int32(self.config.i2))
+        return list(self._ladder)
 
     # -- main loop ----------------------------------------------------------
     def run(self, max_iterations: int | None = None,
@@ -694,7 +817,12 @@ class StructureAwareEngine:
         return self._run_host(max_iterations, warm)
 
     def _start_state(self, warm: WarmStart | None):
+        """(values, psd, rep, calm, i2): the start state of a run. Cold
+        runs start fully active (calm 0 everywhere, configured cadence);
+        warm runs may seed retired calm counters and a delta-scaled
+        cadence (ignored when adaptive is off)."""
         cfg, p = self.config, self.plan
+        calm0 = np.zeros(p.num_blocks, dtype=np.int32)
         if warm is None:
             mode = ("barrier" if self.program.monotone_cooling
                     else "universal")
@@ -703,54 +831,78 @@ class StructureAwareEngine:
                 interval=cfg.repartition_interval,
                 growth=cfg.repartition_growth)
             return (jnp.asarray(self.values0),
-                    jnp.asarray(state_lib.init_psd(p.num_blocks)), rep)
+                    jnp.asarray(state_lib.init_psd(p.num_blocks)), rep,
+                    calm0, cfg.i2)
         if warm.values.shape[0] != self._values_len:
             raise ValueError("warm values must be permuted + padded "
                              f"({warm.values.shape[0]} != {self._values_len})")
         rep = RepartitionState.warm(
             warm.is_hot, interval=cfg.repartition_interval,
             growth=cfg.repartition_growth)
+        if cfg.adaptive and warm.calm is not None:
+            calm0 = np.asarray(warm.calm, dtype=np.int32)
+        i2 = (warm.i2 if cfg.adaptive and warm.i2 is not None
+              else cfg.i2)
         return (jnp.asarray(np.asarray(warm.values, dtype=np.float32)),
-                jnp.asarray(np.asarray(warm.psd, dtype=np.float32)), rep)
+                jnp.asarray(np.asarray(warm.psd, dtype=np.float32)), rep,
+                calm0, int(i2))
 
     def _run_fused(self, max_iterations: int | None = None,
                    warm: WarmStart | None = None) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
-        chunk = self._get_chunk()
 
-        values, psd, rep = self._start_state(warm)
+        values, psd, rep, calm_host, i2 = self._start_state(warm)
+        calm = jnp.asarray(calm_host)
+        psd_host = np.asarray(psd)
+        active = self._active_count(calm_host)
         dmax = jnp.zeros(p.num_blocks, jnp.float32)
         acct = self._acct_table()
         metrics = Metrics()
         history = []
+        depth_hist: dict[int, int] = {}
+        width_iters = 0
 
         with Timer() as t:
             it = 0
             while it < max_it:
+                wb = self._pick_width(active, psd_host)
+                chunk = self._get_chunk(wb)
                 it_end = rep.chunk_end(max_it)
                 # the device counts schedules per block (exact chunk-sized
                 # int32s, zeroed each chunk); the host expands them through
                 # the int64 accounting table at the boundary
-                it_dev, values, psd, dmax, counts, conv = chunk(
-                    self._ed, self._coupling_dev, values, psd, dmax,
+                (it_dev, values, psd, dmax, calm, counts, hslots,
+                 conv) = chunk(
+                    self._ed, self._coupling_dev, values, psd, dmax, calm,
                     jnp.zeros(p.num_blocks, jnp.int32),
+                    jnp.zeros(wb, jnp.int32),
                     jnp.int32(it), jnp.int32(it_end),
-                    jnp.asarray(rep.is_hot))
+                    jnp.asarray(rep.is_hot), jnp.int32(i2))
                 # the chunk's single host sync point
                 it_new = int(it_dev)
                 psd_host = np.asarray(psd)
+                calm_host = np.asarray(calm)
                 counts_host = np.asarray(counts, dtype=np.int64)
                 delta = counts_host @ acct
                 metrics.absorb_counters(delta)
+                span = it_new - it
+                width_iters += wb * span
+                for d, cnt in zip(self._inner_depths(wb).tolist(),
+                                  np.asarray(hslots).tolist()):
+                    if cnt:
+                        depth_hist[int(d)] = depth_hist.get(int(d), 0) + \
+                            int(cnt)
                 history.append({
                     "iteration": max(it_new - 1, 0),
-                    "span": it_new - it,  # iterations covered by this entry
+                    "span": span,  # iterations covered by this entry
                     "psd_sum": float(psd_host[psd_host <
                                               state_lib.UNSEEN].sum()),
                     "unseen": int((psd_host >= state_lib.UNSEEN).sum()),
                     "hot_blocks": int(rep.is_hot.sum()),
                     "scheduled": int(delta[2]),  # block loads
+                    "width": wb,
+                    "retired": p.num_blocks - self._active_count(calm_host),
                 })
                 if bool(conv):
                     metrics.converged = True
@@ -760,8 +912,14 @@ class StructureAwareEngine:
                     break
                 it = it_new
                 rep.maybe_repartition(it - 1, psd_host, cfg.hot_ratio)
+                # next chunk's bucket follows the live active set, exactly
+                # like the host loop's boundary retarget
+                active = self._active_count(calm_host)
         metrics.iterations = it
         metrics.wall_time_s = t.elapsed
+        metrics.mean_dispatch_width = width_iters / max(it, 1)
+        metrics.blocks_retired = p.num_blocks - self._active_count(calm_host)
+        metrics.inner_depth_hist = depth_hist
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 
@@ -769,16 +927,20 @@ class StructureAwareEngine:
                   warm: WarmStart | None = None) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
-        # Per-block pruning floor: skipping blocks below t2/P is safe — if
-        # every block were below it, SUM(psd) < t2 and we are converged.
-        sched = Scheduler(width=cfg.width, i2=cfg.i2, cold_frac=cfg.cold_frac,
-                          min_psd=cfg.t2 / max(p.num_blocks, 1))
 
-        values, psd, rep = self._start_state(warm)
-        dmax = jnp.zeros(p.num_blocks, jnp.float32)
+        values, psd, rep, calm_host, i2 = self._start_state(warm)
         psd_host = np.asarray(psd)
+        sched = Scheduler(width=self._pick_width(
+                              self._active_count(calm_host), psd_host),
+                          i2=i2, cold_frac=cfg.cold_frac,
+                          min_psd=self._psd_floor())
+        calm = jnp.asarray(calm_host)
+        dmax = jnp.zeros(p.num_blocks, jnp.float32)
         metrics = Metrics()
         history = []
+        depth_hist: dict[int, int] = {}
+        hslots = np.zeros(cfg.width, dtype=np.int64)
+        width_iters = 0
 
         with Timer() as t:
             it = 0
@@ -787,17 +949,29 @@ class StructureAwareEngine:
                 if sel.hot_ids.size == 0 and sel.cold_ids.size == 0:
                     break
                 values, psd, dmax = self._dispatch(
-                    values, psd, dmax, sel.hot_ids, sequential=True)
+                    values, psd, dmax, sel.hot_ids, sequential=True,
+                    width=sched.width)
                 values, psd, dmax = self._dispatch(
-                    values, psd, dmax, sel.cold_ids, sequential=False)
+                    values, psd, dmax, sel.cold_ids, sequential=False,
+                    width=sched.width)
                 processed = np.concatenate([sel.hot_ids, sel.cold_ids])
                 self._account(metrics, processed)
+                hslots[:sel.hot_ids.size] += 1
+                width_iters += sched.width
                 # staleness propagation (device-side max-product matvec):
                 # a max per-vertex delta v in block j can move block b's
-                # mean-PSD by at most decay * v * coupling(j->b).
-                psd, dmax = self._post(self._coupling_dev, psd, dmax)
+                # mean-PSD by at most decay * v * coupling(j->b); the post
+                # also advances the calm/retire counters.
+                psd, dmax, calm = self._post(self._coupling_dev, psd, dmax,
+                                             calm)
                 psd_host = np.asarray(psd)
-                rep.maybe_repartition(it, psd_host, cfg.hot_ratio)
+                fired = rep.maybe_repartition(it, psd_host, cfg.hot_ratio)
+                if fired and cfg.adaptive:
+                    # boundary retarget: same cadence as the fused path's
+                    # per-chunk bucket pick
+                    calm_host = np.asarray(calm)
+                    sched.width = self._pick_width(
+                        self._active_count(calm_host), psd_host)
                 history.append({
                     "iteration": it,
                     "psd_sum": float(psd_host[psd_host <
@@ -805,13 +979,22 @@ class StructureAwareEngine:
                     "unseen": int((psd_host >= state_lib.UNSEEN).sum()),
                     "hot_blocks": int(rep.is_hot.sum()),
                     "scheduled": int(processed.size),
+                    "width": sched.width,
                 })
                 it += 1
                 if state_lib.converged(psd_host, cfg.t2):
                     metrics.converged = True
                     break
+        calm_host = np.asarray(calm)
+        depths = self._inner_depths(cfg.width)
+        for d, cnt in zip(depths.tolist(), hslots.tolist()):
+            if cnt:
+                depth_hist[int(d)] = depth_hist.get(int(d), 0) + int(cnt)
         metrics.iterations = it
         metrics.wall_time_s = t.elapsed
+        metrics.mean_dispatch_width = width_iters / max(it, 1)
+        metrics.blocks_retired = p.num_blocks - self._active_count(calm_host)
+        metrics.inner_depth_hist = depth_hist
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 

@@ -36,6 +36,12 @@ class Metrics:
     bytes_loaded: int = 0
     wall_time_s: float = 0.0
     converged: bool = False
+    # adaptive active-set audit trail: how much of the schedule the run
+    # actually retired / narrowed / shallowed (zero on the dense path)
+    blocks_retired: int = 0  # blocks individually converged-and-retired at end
+    mean_dispatch_width: float = 0.0  # iteration-weighted dispatch bucket
+    inner_depth_hist: dict = dataclasses.field(default_factory=dict)
+    # hot-slot executions per Gauss-Seidel depth {t_inner: count}
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -81,10 +87,20 @@ class StreamMetrics:
     vertices_reset: int = 0  # non-monotone delete re-heat resets
     bytes_uploaded: int = 0  # actual host->device payload across batches
     bytes_full: int = 0  # what full per-batch re-uploads would have cost
+    # adaptive active-set accounting across warm reconvergences
+    blocks_retired: int = 0  # cumulative end-of-batch retired blocks
+    width_iterations: float = 0.0  # sum of dispatch width over iterations
+    inner_depth_hist: dict = dataclasses.field(default_factory=dict)
 
     @property
     def dirty_frac(self) -> float:
         return self.dirty_blocks / max(self.blocks_seen, 1)
+
+    @property
+    def mean_dispatch_width(self) -> float:
+        """Iteration-weighted mean dispatch-bucket width across batches —
+        the claimed tail-superstep saving, auditable."""
+        return self.width_iterations / max(self.iterations, 1)
 
     @property
     def upload_frac(self) -> float:
@@ -100,6 +116,7 @@ class StreamMetrics:
         d["dirty_frac"] = self.dirty_frac
         d["upload_frac"] = self.upload_frac
         d["latency_per_batch_s"] = self.latency_per_batch_s
+        d["mean_dispatch_width"] = self.mean_dispatch_width
         return d
 
 

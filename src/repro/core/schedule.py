@@ -30,6 +30,12 @@ class Selection:
 
 @dataclasses.dataclass
 class Scheduler:
+    """Host reference scheduler. ``width`` and ``i2`` are deliberately
+    mutable: the adaptive engine retargets them at repartition boundaries
+    (dispatch-width bucket) and per warm restart (delta-scaled cadence),
+    mirroring what the fused path does with compiled buckets + a traced
+    i2."""
+
     width: int  # W = m + n
     i2: int = 4  # cold-admission cadence
     cold_frac: float = 0.25  # n = floor(W * cold_frac) (m > n per the paper)
@@ -62,16 +68,21 @@ class Scheduler:
         return Selection(hot_ids=hot_pick, cold_ids=cold_pick)
 
 
-def make_device_select(width: int, i2: int, cold_frac: float,
+def make_device_select(width: int, cold_frac: float,
                        min_psd: float, pad_id: int = 0):
     """jnp port of :meth:`Scheduler.select` for the fused superstep.
 
-    Returns ``select(iteration, psd, is_hot) -> (hot_rows, hot_ok,
+    Returns ``select(iteration, i2, psd, is_hot) -> (hot_rows, hot_ok,
     cold_rows, cold_ok)``: fixed-width (W,) block-id slots plus validity
     masks, where ``hot_rows[hot_ok]`` equals ``Selection.hot_ids`` (same
     blocks, same order) and likewise for cold. Tie-breaking matches the
     numpy version exactly: descending PSD, lowest block id first on equal
     PSD (a stable sort over ids in ascending order).
+
+    ``width`` is static (it shapes the slot arrays — the adaptive engine
+    compiles one select per dispatch-width bucket); ``i2`` is a TRACED
+    argument so warm streaming restarts can scale the cold-admission
+    cadence per batch without compiling a new superstep.
 
     ``pad_id`` fills slots beyond the take counts. Those slots are never
     marked ok, but the fused sweeps still *compute* them (discarding the
@@ -81,7 +92,7 @@ def make_device_select(width: int, i2: int, cold_frac: float,
     n_cold_quota = int(width * cold_frac)
     slots = jnp.arange(width)
 
-    def select(iteration, psd, is_hot):
+    def select(iteration, i2, psd, is_hot):
         live = psd >= min_psd
         hot_live = is_hot & live
         cold_live = jnp.logical_not(is_hot) & live
@@ -94,13 +105,9 @@ def make_device_select(width: int, i2: int, cold_frac: float,
             jnp.where(hot_live, -psd, jnp.inf), stable=True)
         cold_order = jnp.argsort(
             jnp.where(cold_live, -psd, jnp.inf), stable=True)
-        if i2:
-            is_i2 = iteration % i2 == 0
-            m = jnp.where(is_i2, width - n_cold_quota, width)
-            n = jnp.where(is_i2, n_cold_quota, 0)
-        else:
-            m = jnp.int32(width)
-            n = jnp.int32(0)
+        is_i2 = (i2 > 0) & (iteration % jnp.maximum(i2, 1) == 0)
+        m = jnp.where(is_i2, width - n_cold_quota, width)
+        n = jnp.where(is_i2, n_cold_quota, 0)
         hot_take = jnp.minimum(m, n_hot)
         # work-conserving top-up (also covers the no-hot-blocks case:
         # hot_take == 0 < m hands the full width to cold)
@@ -119,3 +126,44 @@ def make_device_select(width: int, i2: int, cold_frac: float,
                 to_slots(cold_order, cold_take), slots < cold_take)
 
     return select
+
+
+# -- adaptive active-set helpers ---------------------------------------------
+def width_ladder(width: int, min_width: int = 2) -> list[int]:
+    """Descending dispatch-width buckets: the configured width, then powers
+    of two below it down to ``min_width``. The fused engine compiles one
+    superstep per bucket and the host picks the bucket matching the live
+    active-set size at each repartition boundary, so tail supersteps stop
+    paying full-width sweeps over padded slots."""
+    ladder = [width]
+    b = 1 << max(width.bit_length() - 1, 0)
+    if b == width:
+        b >>= 1
+    while b >= max(min_width, 1):
+        ladder.append(b)
+        b >>= 1
+    return ladder
+
+
+def pick_width(ladder: list[int], active: int) -> int:
+    """Smallest bucket that covers the active set (the widest bucket when
+    none does). ``ladder`` is descending, as built by :func:`width_ladder`."""
+    for wb in reversed(ladder):
+        if wb >= active:
+            return wb
+    return ladder[0]
+
+
+def adaptive_i2(i2: int, num_blocks: int, perturbed: int,
+                max_scale: int = 8) -> int:
+    """Delta-proportional cold-admission cadence for warm restarts: a batch
+    that perturbs only a small fraction of the blocks admits cold blocks
+    proportionally less often (up to ``max_scale`` times rarer), so the
+    reconvergence effort scales with the perturbation rather than the
+    graph. Batches touching >= a quarter of the blocks keep the configured
+    cadence."""
+    if i2 <= 0:
+        return i2
+    frac = perturbed / max(num_blocks, 1)
+    scale = int(np.clip(round(0.25 / max(frac, 1e-9)), 1, max_scale))
+    return i2 * scale

@@ -44,6 +44,23 @@ def warm_psd(num_blocks: int, dirty: np.ndarray,
     return psd
 
 
+def warm_calm(num_blocks: int, armed: np.ndarray,
+              retire_after: int) -> np.ndarray:
+    """Block-local convergence counters for a warm restart (adaptive
+    active-set execution): ``calm[b]`` counts consecutive supersteps block
+    b spent under the engine's pruning floor; ``calm >= retire_after``
+    marks the block retired from the active set. Armed blocks (dirty
+    re-heats and aux-bumped blocks) start fresh (calm 0); clean blocks
+    start already retired — they ARE individually converged, and re-enter
+    the active set only when a staleness-coupling or aux bump lifts their
+    PSD back over the floor (which resets calm). This is what lets a small
+    delta batch start in a narrow dispatch bucket instead of paying
+    full-width sweeps over converged padding."""
+    calm = np.full(num_blocks, retire_after, dtype=np.int32)
+    calm[np.asarray(armed, dtype=bool)] = 0
+    return calm
+
+
 def converged(psd: np.ndarray, t2: float) -> bool:
     """Paper §4: the entire graph converges when sum of PSDs < T2."""
     return bool(np.asarray(psd, dtype=np.float64).sum() < t2)

@@ -23,6 +23,16 @@ and friends), and the delete-reset frontier closure is served from the
 EdgeStore's by-src buckets instead of an O(m) CSR rebuild. The
 `StreamBatchReport.upload_frac` column measures exactly this.
 
+Delta-proportional reconvergence (adaptive engines): the warm restart
+seeds the engine's block-local convergence counters so only the
+perturbed blocks (dirty re-heats + aux bumps) start in the active set —
+a 200-edit batch opens in a narrow dispatch-width bucket with a
+cold-admission cadence scaled to the perturbed fraction
+(`schedule.adaptive_i2`), and clean blocks re-enter only when the
+staleness coupling lifts them over the pruning floor. Reconvergence
+effort therefore scales with the batch, not the graph (BLADYG's
+argument for delta-local recomputation).
+
 Non-monotone deletions: min/max programs can never take back a value, so
 before the warm re-start the program's ``reset_on_delete`` hook
 re-initialises every vertex whose value might (transitively) depend on a
@@ -40,6 +50,7 @@ from repro.core import state as state_lib
 from repro.core.algorithms import VertexProgram
 from repro.core.engine import (EngineConfig, RunResult, StructureAwareEngine,
                                WarmStart, coupling_from_counts)
+from repro.core.schedule import adaptive_i2
 from repro.core.graph import Graph, edges_of, from_edges, symmetrize
 from repro.core.metrics import StreamMetrics, Timer
 from repro.stream.apply import EdgeStore, MutableTiledState
@@ -72,6 +83,14 @@ class StreamBatchReport:
     ingest_time_s: float
     reconverge_time_s: float
     converged: bool
+    # adaptive active-set stats of the warm reconvergence. All zero when
+    # the batch needed no run; on the dense fallback retirement stays 0
+    # but mean_dispatch_width reports the full configured width (the
+    # fixed slate IS the dispatch width) and the depth histogram carries
+    # the constant depth.
+    blocks_retired: int = 0  # blocks retired at reconvergence end
+    mean_dispatch_width: float = 0.0  # iteration-weighted bucket width
+    inner_depth_hist: dict = dataclasses.field(default_factory=dict)
 
     @property
     def dirty_frac(self) -> float:
@@ -135,6 +154,10 @@ class StreamingEngine:
         # snapshot serves every delete-reset without rebuilding a Graph
         self._init_values = np.asarray(self.program.init(g)[0])
         self._prewarm_scatters()
+        # compile every dispatch-width bucket at epoch build: a warm batch
+        # lands straight in a narrow bucket, and paying that compile inside
+        # a batch's reconverge latency would bill one batch for all
+        self.engine.prewarm_buckets()
 
     def _prewarm_scatters(self) -> None:
         """Compile the chunked device-scatter executables at epoch build
@@ -330,13 +353,16 @@ class StreamingEngine:
             # 5. commit to the engine — inside the ingest timer, so both
             # the worst case (overflow -> full plan rebuild) and the
             # device upload are billed to the batch's latency
+            calm0 = None
+            i2_warm = None
             if overflow:
                 # a block outgrew its slack capacity: new epoch
                 # (re-permute by current activity, re-provision slack,
                 # recompile); values stay warm, every block re-heats. The
                 # partial appends/rebuilds made before the overflow were
                 # discarded with the old tiles — do not let them count as
-                # in-place maintenance
+                # in-place maintenance. Everything is perturbed, so the
+                # warm run starts fully active (no calm seed, base i2).
                 appended = rebuilt = killed_blocks = 0
                 self._rebuild_epoch()
                 eng = self.engine
@@ -373,6 +399,20 @@ class StreamingEngine:
                     # carry a finite prunable PSD, not the UNSEEN re-heat
                     is_hot |= aux_bump > 0
                 psd0 = state_lib.warm_psd(plan.num_blocks, dirty, aux_bump)
+                if eng.config.adaptive:
+                    # delta-proportional warm restart: only the perturbed
+                    # blocks (dirty re-heats + aux bumps) start active, so
+                    # the reconvergence opens in a dispatch bucket sized to
+                    # the batch, with a cold-admission cadence scaled to
+                    # the perturbed fraction — effort follows the delta,
+                    # not the graph
+                    armed = dirty.copy()
+                    if aux_bump is not None:
+                        armed |= aux_bump > 0
+                    calm0 = state_lib.warm_calm(
+                        plan.num_blocks, armed, eng.config.retire_after)
+                    i2_warm = adaptive_i2(eng.config.i2, plan.num_blocks,
+                                          int(armed.sum()))
 
             # 6. reclaim dead store rows — at the very END of ingest, after
             # every use of this batch's edge ids (compaction renumbers
@@ -387,7 +427,7 @@ class StreamingEngine:
                         np.float32)
                     res = self.engine.run(warm=WarmStart(
                         values=self.engine.pad_values(vals_perm),
-                        psd=psd0, is_hot=is_hot))
+                        psd=psd0, is_hot=is_hot, calm=calm0, i2=i2_warm))
                     bytes_up += self.engine.values_nbytes
             else:
                 # reference mode: cold full recompute on the SAME mutated
@@ -410,7 +450,12 @@ class StreamingEngine:
             bytes_uploaded=int(bytes_up),
             bytes_full=int(self.engine.full_upload_bytes()),
             ingest_time_s=t_ing.elapsed, reconverge_time_s=t_run.elapsed,
-            converged=res.metrics.converged if res else True)
+            converged=res.metrics.converged if res else True,
+            blocks_retired=res.metrics.blocks_retired if res else 0,
+            mean_dispatch_width=(res.metrics.mean_dispatch_width
+                                 if res else 0.0),
+            inner_depth_hist=dict(res.metrics.inner_depth_hist)
+            if res else {})
         self._absorb(report)
         return report
 
@@ -479,3 +524,7 @@ class StreamingEngine:
         m.vertices_reset += r.vertices_reset
         m.bytes_uploaded += r.bytes_uploaded
         m.bytes_full += r.bytes_full
+        m.blocks_retired += r.blocks_retired
+        m.width_iterations += r.mean_dispatch_width * r.iterations
+        for d, cnt in r.inner_depth_hist.items():
+            m.inner_depth_hist[d] = m.inner_depth_hist.get(d, 0) + cnt

@@ -1,6 +1,9 @@
 """Engine correctness: both engines reach the same fixpoint as numpy
 oracles, on every algorithm, across graph families (the paper's exactness
 requirement — scheduling must never change results)."""
+import dataclasses
+
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
@@ -120,17 +123,20 @@ def test_dead_partition_one_shot():
 # -- fused superstep loop ----------------------------------------------------
 @given(n=st.integers(100, 800), avg=st.integers(2, 6),
        seed=st.integers(0, 20),
-       algo=st.sampled_from(["pagerank", "sssp", "bfs", "cc"]))
+       algo=st.sampled_from(["pagerank", "sssp", "bfs", "cc"]),
+       adaptive=st.booleans())
 @settings(max_examples=10, deadline=None)
-def test_fused_matches_host_loop_property(n, avg, seed, algo):
+def test_fused_matches_host_loop_property(n, avg, seed, algo, adaptive):
     """Property: the device-resident lax.while_loop engine reaches the SAME
     fixpoint as the host-driven reference loop — values, iteration count,
     and metric accounting — for every program class (sum + min/max, i.e.
-    barrier + universal repartitioning with the cold re-heat path)."""
+    barrier + universal repartitioning with the cold re-heat path), with
+    the adaptive active-set model ON as well as on the dense fallback
+    (decision parity of retirement, depth ladder, and width buckets)."""
     g = G.powerlaw_graph(n, avg_deg=avg, seed=seed, weighted=True)
     prog = {"pagerank": A.pagerank, "cc": A.cc,
             "sssp": lambda: A.sssp(0), "bfs": lambda: A.bfs(0)}[algo]()
-    cfg = EngineConfig(t2=1e-9, width=4, block_size=128)
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128, adaptive=adaptive)
     host = StructureAwareEngine(g, prog, cfg).run(fused=False)
     fused = StructureAwareEngine(g, prog, cfg).run(fused=True)
     assert _close(host.values, fused.values, rtol=1e-5, atol=1e-6)
@@ -139,6 +145,102 @@ def test_fused_matches_host_loop_property(n, avg, seed, algo):
     assert host.metrics.updates == fused.metrics.updates
     assert host.metrics.block_loads == fused.metrics.block_loads
     assert host.metrics.bytes_loaded == fused.metrics.bytes_loaded
+
+
+@given(n=st.integers(200, 800), seed=st.integers(0, 20),
+       algo=st.sampled_from(["pagerank", "sssp", "cc"]))
+@settings(max_examples=8, deadline=None)
+def test_adaptive_dense_host_fixpoint_property(n, seed, algo):
+    """Property (adaptive tentpole): the adaptive fused path, the dense
+    fused path, and the host reference loop all declare convergence at
+    SUM(psd) < t2 and land on the same fixpoint — the adaptive schedule
+    (retirement, depth ladder, width buckets) changes effort, never
+    results."""
+    g = G.powerlaw_graph(n, avg_deg=4, seed=seed, weighted=True)
+    prog = {"pagerank": A.pagerank, "cc": A.cc,
+            "sssp": lambda: A.sssp(0)}[algo]
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128,
+                       retire_after=2)
+    ra = StructureAwareEngine(g, prog(), cfg).run(fused=True)
+    rd = StructureAwareEngine(
+        g, prog(), dataclasses.replace(cfg, adaptive=False)).run(fused=True)
+    rh = StructureAwareEngine(g, prog(), cfg).run(fused=False)
+    assert ra.metrics.converged and rd.metrics.converged \
+        and rh.metrics.converged
+    assert _close(ra.values, rd.values, rtol=1e-4, atol=1e-5)
+    assert _close(ra.values, rh.values, rtol=1e-5, atol=1e-6)
+    # the dense fallback reports no adaptive activity
+    assert rd.metrics.blocks_retired == 0
+    assert rd.metrics.mean_dispatch_width == cfg.width
+    assert list(rd.metrics.inner_depth_hist) in ([], [cfg.hot_inner_iters])
+
+
+# -- adaptive active set: retirement, depth ladder, width buckets ------------
+def test_block_retire_and_rearm():
+    """A block whose PSD stays under the pruning floor for ``retire_after``
+    consecutive supersteps is retired from the active set (narrowest
+    dispatch bucket, nothing schedulable); a staleness-coupling bump lifts
+    its downstream blocks back over the floor, resets their calm counters,
+    and they are dispatched again."""
+    g = G.chain_graph(512, weighted=True)
+    cfg = EngineConfig(t2=1e-6, width=4, block_size=128, retire_after=2)
+    eng = StructureAwareEngine(g, A.pagerank(), cfg)
+    p = eng.plan.num_blocks
+    floor = eng._psd_floor()
+    psd = jnp.zeros(p, jnp.float32)
+    dmax = jnp.zeros(p, jnp.float32)
+    calm = jnp.zeros(p, jnp.int32)
+    # quiescent supersteps: every block retires after retire_after posts
+    for _ in range(cfg.retire_after):
+        psd, dmax, calm = eng._post(eng._coupling_dev, psd, dmax, calm)
+    calm_h = np.asarray(calm)
+    assert (calm_h >= cfg.retire_after).all()
+    assert eng._active_count(calm_h) == 0
+    assert eng._pick_width(0, np.asarray(psd)) == cfg.min_width
+    sched = Scheduler(width=cfg.width, i2=cfg.i2, min_psd=floor)
+    sel = sched.select(0, np.asarray(psd), np.zeros(p, dtype=bool))
+    assert sel.hot_ids.size == 0 and sel.cold_ids.size == 0  # retired
+    # a delta in block 0 re-arms its downstream blocks through the
+    # coupling: calm resets and the scheduler dispatches them again
+    dmax = jnp.zeros(p, jnp.float32).at[0].set(1.0)
+    psd, dmax, calm = eng._post(eng._coupling_dev, psd, dmax, calm)
+    psd_h, calm_h = np.asarray(psd), np.asarray(calm)
+    rearmed = np.flatnonzero(psd_h >= floor)
+    assert rearmed.size > 0
+    assert (calm_h[rearmed] == 0).all()
+    assert eng._active_count(calm_h) == rearmed.size
+    sel = sched.select(0, psd_h, np.zeros(p, dtype=bool))
+    assert sel.cold_ids.size == min(cfg.width, rearmed.size)
+    assert set(sel.cold_ids.tolist()) <= set(rearmed.tolist())
+
+
+def test_width_ladder_pick_and_adaptive_i2():
+    from repro.core.schedule import adaptive_i2, pick_width, width_ladder
+    assert width_ladder(16, 2) == [16, 8, 4, 2]
+    assert width_ladder(12, 2) == [12, 8, 4, 2]
+    assert width_ladder(16, 4) == [16, 8, 4]
+    assert width_ladder(1, 2) == [1]
+    lad = width_ladder(16, 2)
+    assert pick_width(lad, 0) == 2
+    assert pick_width(lad, 2) == 2
+    assert pick_width(lad, 3) == 4
+    assert pick_width(lad, 9) == 16
+    assert pick_width(lad, 100) == 16  # never wider than configured
+    assert adaptive_i2(4, 40, 40) == 4  # dense perturbation: base cadence
+    assert adaptive_i2(4, 40, 10) == 4  # a quarter of the blocks: base
+    assert adaptive_i2(4, 40, 5) == 8  # 1/8 perturbed: 2x rarer admission
+    assert adaptive_i2(4, 40, 1) == 32  # tiny batch: capped at 8x
+    assert adaptive_i2(0, 40, 1) == 0  # disabled cadence stays disabled
+
+
+def test_inner_depth_ladder():
+    g = G.powerlaw_graph(300, 4, seed=0)
+    cfg = EngineConfig(width=8, hot_inner_iters=8)
+    eng = StructureAwareEngine(g, A.pagerank(), cfg)
+    assert eng._inner_depths(8).tolist() == [8, 4, 2, 1, 1, 1, 1, 1]
+    dense = StructureAwareEngine(
+        g, A.pagerank(), dataclasses.replace(cfg, adaptive=False))
+    assert dense._inner_depths(8).tolist() == [8] * 8
 
 
 def test_fused_reheat_path():
@@ -182,10 +284,9 @@ def test_device_select_matches_numpy(p, width, i2, it, seed):
     is_hot = rng.random(p) < 0.4
     sched = Scheduler(width=width, i2=i2, cold_frac=0.25, min_psd=1e-12)
     sel = sched.select(it, psd, is_hot)
-    dev = make_device_select(width=width, i2=i2, cold_frac=0.25,
-                             min_psd=1e-12)
+    dev = make_device_select(width=width, cold_frac=0.25, min_psd=1e-12)
     hot_rows, hot_ok, cold_rows, cold_ok = (np.asarray(x) for x in
-                                            dev(it, psd, is_hot))
+                                            dev(it, i2, psd, is_hot))
     assert np.array_equal(hot_rows[hot_ok], sel.hot_ids)
     assert np.array_equal(cold_rows[cold_ok], sel.cold_ids)
 
