@@ -46,9 +46,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20000,
                     help="graph size for the engine benchmarks")
-    ap.add_argument("--only", default=None,
+    ap.add_argument("--suites", default=None,
                     help="comma list: runtime,convergence,io,kernels,"
-                         "streaming")
+                         "streaming,serving — plus serving_smoke, a cheap "
+                         "2-lane serving subset (small n) CI can run "
+                         "without the full matrix")
+    ap.add_argument("--only", default=None,
+                    help="deprecated alias of --suites")
+    ap.add_argument("--lanes", type=int, default=8,
+                    help="lane width for the serving suite")
     ap.add_argument("--repeats", type=int, default=1,
                     help="run each suite K times and keep the best "
                          "us_per_call per row — damps the ~±15%% run noise "
@@ -59,15 +65,25 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_convergence, bench_io, bench_kernels,
-                            bench_runtime, bench_streaming)
+                            bench_runtime, bench_serving, bench_streaming)
     suites = {
         "runtime": lambda: bench_runtime.run(args.n),
         "convergence": lambda: bench_convergence.run(args.n),
         "io": lambda: bench_io.run(args.n),
         "kernels": bench_kernels.run,
         "streaming": lambda: bench_streaming.run(args.n),
+        "serving": lambda: bench_serving.run(args.n, lanes=args.lanes),
+        # CI smoke subset: tiny graph, 2 lanes — exercises the whole
+        # serve stack (lanes, pinning, churn) without the full matrix
+        "serving_smoke": lambda: bench_serving.run(min(args.n, 1500),
+                                                   lanes=2),
     }
-    pick = args.only.split(",") if args.only else list(suites)
+    default = [k for k in suites if k != "serving_smoke"]
+    sel = args.suites or args.only
+    pick = sel.split(",") if sel else default
+    unknown = [k for k in pick if k not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; have {sorted(suites)}")
     if args.json and "io" not in pick:
         # the bytes-loaded trajectory is tracked across PRs: a JSON payload
         # without the I/O table rows silently drops it

@@ -295,3 +295,167 @@ REGISTRY: dict[str, Callable[..., VertexProgram]] = {
     "bfs": bfs,
     "cc": cc,
 }
+
+
+# -- multi-lane programs (repro.serve) ---------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LaneProgram:
+    """A *family* of per-source queries executed as lanes of one run.
+
+    The lane generalization of :class:`VertexProgram`: vertex values carry
+    a trailing lane axis ``(n, L)`` and one engine sweep advances every
+    lane at once — the per-block edge slice is gathered once and the
+    messages/aggregates are ``(E, L)`` / ``(C, L)`` instead of ``(E,)`` /
+    ``(C,)``. Everything per-lane (the query's source, a personalized
+    restart vector) lives in DATA — the init values and the optional
+    per-vertex ``vconst`` matrix are traced *arguments* of the compiled
+    lane superstep, never closure constants — so one compiled executable
+    serves every batch of the same family at the same lane width.
+
+    ``lane_init(n, params)`` builds that data on the host: ``params`` is
+    one entry per lane (a source id, or a personalization set) and the
+    result is ``(values (n, L) float32, vconst (n, L) float32 | None)`` in
+    ORIGINAL vertex ids. The values must be structure-independent (same
+    contract as :meth:`VertexProgram.init`), because query lanes run over
+    an epoch snapshot whose degrees are maintained incrementally.
+
+    ``aux_fn(out_deg, in_deg)`` supplies the family's per-vertex constant
+    from the snapshot's degree arrays (elementwise, like
+    ``VertexProgram.aux_fn``); None means the family ignores aux.
+    """
+
+    name: str
+    combine: str  # 'sum' | 'min' | 'max'
+    needs_symmetric: bool
+    monotone_cooling: bool
+    uses_vconst: bool
+    damping: float = 0.85
+    # lane_init(n, params) -> (values (n, L), vconst (n, L) | None)
+    lane_init: Callable[[int, list], tuple[np.ndarray,
+                                           np.ndarray | None]] = None
+    # edge_map(src_vals (E, L), src_aux (E,), w (E,)) -> (E, L)
+    edge_map: Callable[[Array, Array, Array], Array] = None
+    # apply(old (C, L), agg (C, L), vconst (C, L), n_total) -> (C, L)
+    apply: Callable[[Array, Array, Array, int], Array] = None
+    # sd_delta(old (C, L), new (C, L)) -> nonnegative (C, L)
+    sd_delta: Callable[[Array, Array], Array] = None
+    aux_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None
+
+    @property
+    def identity(self) -> np.float32:
+        return {"sum": np.float32(0.0), "min": INF,
+                "max": np.float32(-INF)}[self.combine]
+
+
+def _source_lane_values(n: int, sources: list) -> np.ndarray:
+    vals = np.full((n, len(sources)), INF, dtype=np.float32)
+    for lane, s in enumerate(sources):
+        if not 0 <= int(s) < n:
+            raise ValueError(f"lane source {s} out of range [0, {n})")
+        vals[int(s), lane] = 0.0
+    return vals
+
+
+def k_source_sssp() -> LaneProgram:
+    """L independent single-source shortest-path queries per sweep."""
+
+    def lane_init(n, sources):
+        return _source_lane_values(n, sources), None
+
+    def edge_map(src_vals, src_aux, w):
+        del src_aux
+        return src_vals + w[:, None]
+
+    def apply(old, agg, vconst, n_total):
+        del vconst, n_total
+        return jnp.minimum(old, agg)
+
+    def sd_delta(old, new):  # Eq. 4 per lane
+        return jnp.where(new < old, jnp.minimum(new, old), 0.0)
+
+    return LaneProgram(name="k_sssp", combine="min", needs_symmetric=False,
+                       monotone_cooling=False, uses_vconst=False,
+                       lane_init=lane_init, edge_map=edge_map, apply=apply,
+                       sd_delta=sd_delta)
+
+
+def k_source_bfs() -> LaneProgram:
+    """L independent BFS (unit-weight distance) queries per sweep."""
+
+    def lane_init(n, sources):
+        return _source_lane_values(n, sources), None
+
+    def edge_map(src_vals, src_aux, w):
+        del src_aux, w
+        return src_vals + 1.0
+
+    def apply(old, agg, vconst, n_total):
+        del vconst, n_total
+        return jnp.minimum(old, agg)
+
+    def sd_delta(old, new):
+        return jnp.where(new < old, 1.0, 0.0)
+
+    return LaneProgram(name="k_bfs", combine="min", needs_symmetric=False,
+                       monotone_cooling=False, uses_vconst=False,
+                       lane_init=lane_init, edge_map=edge_map, apply=apply,
+                       sd_delta=sd_delta)
+
+
+def k_personalized_pagerank(damping: float = 0.85) -> LaneProgram:
+    """L personalized-PageRank queries per sweep: lane l restarts into its
+    own distribution r_l (``vconst`` column l) instead of the uniform
+    vector — v_l = (1-d) r_l + d A v_l. A lane's param is either a dense
+    (n,) distribution or a set of vertex ids (uniform over the set).
+    Dangling mass vanishes exactly as in the registered ``pagerank``
+    program (aux = max(out_deg, 1))."""
+
+    def lane_init(n, resets):
+        r = np.zeros((n, len(resets)), dtype=np.float32)
+        for lane, rs in enumerate(resets):
+            rs = np.asarray(rs)
+            if rs.ndim == 1 and rs.size == n and rs.dtype.kind == "f":
+                col = rs.astype(np.float64)
+                if not np.isclose(col.sum(), 1.0, rtol=1e-4):
+                    raise ValueError("dense reset must sum to 1")
+                r[:, lane] = col.astype(np.float32)
+            else:
+                ids = rs.astype(np.int64).reshape(-1)
+                if ids.size == 0 or ids.min() < 0 or ids.max() >= n:
+                    raise ValueError("reset set must be non-empty vertex "
+                                     f"ids in [0, {n})")
+                # np.add.at, not fancy-indexed +=: a repeated id must
+                # accumulate its full share or the restart mass silently
+                # shrinks below 1
+                np.add.at(r[:, lane], ids, np.float32(1.0 / ids.size))
+        # start at the restart vector: the fixpoint's (1-d) r term is
+        # already in place, so warm-ish convergence from lane data alone
+        return r.copy(), r
+
+    def edge_map(src_vals, src_aux, w):
+        del w
+        return src_vals / src_aux[:, None]
+
+    def apply(old, agg, vconst, n_total):
+        del old, n_total
+        return (1.0 - damping) * vconst + damping * agg
+
+    def sd_delta(old, new):  # Eq. 3 per lane
+        return jnp.abs(new - old)
+
+    def aux_fn(out_deg, in_deg):
+        del in_deg
+        return np.maximum(out_deg, 1).astype(np.float32)
+
+    return LaneProgram(name="k_ppr", combine="sum", needs_symmetric=False,
+                       monotone_cooling=True, uses_vconst=True,
+                       damping=damping, lane_init=lane_init,
+                       edge_map=edge_map, apply=apply, sd_delta=sd_delta,
+                       aux_fn=aux_fn)
+
+
+LANE_FAMILIES: dict[str, Callable[..., LaneProgram]] = {
+    "sssp": k_source_sssp,
+    "bfs": k_source_bfs,
+    "ppr": k_personalized_pagerank,
+}

@@ -91,7 +91,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import state as state_lib
-from repro.core.algorithms import VertexProgram
+from repro.core.algorithms import LaneProgram, VertexProgram
 from repro.core.graph import Graph, symmetrize
 from repro.core.metrics import Metrics, Timer, block_io_bytes
 from repro.core.partition import (EdgeStorage, PartitionPlan, TiledStorage,
@@ -176,6 +176,58 @@ def edge_data(store: TiledStorage, aux) -> EdgeData:
                     dstl=jnp.asarray(store.dst_local),
                     w=jnp.asarray(store.w), valid=jnp.asarray(store.valid),
                     aux=jnp.asarray(aux))
+
+
+# -- adaptive-schedule decision helpers --------------------------------------
+# Module-level so the multi-lane query engine (repro.serve.lanes) applies the
+# SAME decisions as the single-program engine — the single-lane service path
+# reproduces the engine trajectory exactly because these are shared, not
+# reimplemented.
+def inner_depths(cfg: EngineConfig, width: int) -> np.ndarray:
+    """Per-slot Gauss-Seidel depth for the hot sweep, by PSD rank: slot 0
+    (the hottest block) runs the full ``hot_inner_iters``, halving per rank
+    down to 1 — deep async iteration is spent where the delta mass is, not
+    on every scheduled block. Dense mode keeps the constant depth. Depth
+    depends only on the absolute slot index, so host and fused ranks (and
+    every width bucket) agree."""
+    t = max(cfg.hot_inner_iters, 1)
+    if not cfg.adaptive:
+        return np.full(width, t, dtype=np.int32)
+    return np.maximum(1, t >> np.minimum(np.arange(width), 30)) \
+        .astype(np.int32)
+
+
+def dispatch_width(cfg: EngineConfig, ladder: list[int], active: int,
+                   psd_host: np.ndarray) -> int:
+    """Dispatch bucket for the live active-set size (non-retired blocks),
+    chosen by the host at repartition boundaries. While an UNSEEN re-heat
+    wave is still in flight the bucket gets 2x headroom: unprocessed
+    blocks are about to re-arm their neighbourhood through the staleness
+    coupling, and a bucket that exactly covers today's active set
+    throttles that propagation (measured: more supersteps at barely-lower
+    per-superstep cost). Once the wave has passed, the active count is
+    trustworthy and the tail narrows for real."""
+    if not cfg.adaptive:
+        return cfg.width
+    if bool((psd_host >= state_lib.UNSEEN).any()):
+        active *= 2
+    return pick_width(ladder, active)
+
+
+def acct_table(plan: PartitionPlan, edge_counts: np.ndarray) -> np.ndarray:
+    """(P, len(COUNTER_FIELDS)) host-side accounting row per schedule of a
+    block: [vertices updated, edges processed, 1 load, bytes loaded]. The
+    device only counts schedules per block (small exact int32s); the host
+    multiplies through this table at flush time, so metric totals stay
+    exact at any scale. ``edge_counts`` is the CALLER'S live per-block
+    count (warm streaming runs and pinned query epochs bill mutated blocks
+    at their size when the run started, not the plan snapshot)."""
+    acct = np.zeros((plan.num_blocks, 4), dtype=np.int64)
+    for b in range(plan.num_blocks):
+        lo, hi = plan.block_range(b)
+        e = int(edge_counts[b])
+        acct[b] = (hi - lo, e, 1, block_io_bytes(e, plan.block_size))
+    return acct
 
 
 def _combine_local(program: VertexProgram, msg, dst_local, block_size,
@@ -308,6 +360,85 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage,
     return process_one, process_iterated, gids
 
 
+def make_lane_processor(program: LaneProgram, store: TiledStorage,
+                        block_size: int, n_live: int, n_total: int):
+    """Lane-axis generalization of :func:`make_tiled_processor`: vertex
+    values are ``(values_len, L)`` and one pass over a block's edge tiles
+    advances every lane — the edge slice (src ids, weights, validity) is
+    read ONCE per tile and the gather/combine/apply math is vectorized
+    over the lane axis, so L queries share each partition load. The lane
+    count is taken from the runtime shapes (jit specializes per L; the
+    query service pads batches to a fixed L so one executable serves the
+    steady state). ``vconst`` is the per-vertex-per-lane constant matrix
+    (personalized restart vectors); families that ignore it get zeros.
+    Per-block results are per-lane vectors: (base, new (C, L), mean-delta
+    (L,), max-delta (L,)) — the (P, L) PSD state the lane superstep
+    schedules on."""
+    tile_start = jnp.asarray(store.tile_start, dtype=jnp.int32)
+    tile_cnt = jnp.asarray(store.tile_cnt, dtype=jnp.int32)
+    gids = jnp.arange(store.num_blocks, dtype=jnp.int32)
+    c = block_size
+
+    if program.combine == "sum":
+        def combine(msg, dstl, nl):
+            return jnp.zeros((c, nl), jnp.float32).at[dstl].add(msg)
+        merge = jnp.add
+    elif program.combine == "min":
+        def combine(msg, dstl, nl):
+            return jnp.full((c, nl), program.identity).at[dstl].min(msg)
+        merge = jnp.minimum
+    else:
+        def combine(msg, dstl, nl):
+            return jnp.full((c, nl), program.identity).at[dstl].max(msg)
+        merge = jnp.maximum
+
+    def process_one(ed: EdgeData, values, vconst, row):
+        nl = values.shape[1]
+        t0 = tile_start[row]
+        if program.combine == "sum":
+            agg0 = jnp.zeros((c, nl), jnp.float32)
+        else:
+            agg0 = jnp.full((c, nl), program.identity)
+
+        def tile_body(t, agg):
+            r = t0 + t
+            e_src = ed.src[r]
+            msg = program.edge_map(values[e_src], ed.aux[e_src], ed.w[r])
+            msg = jnp.where(ed.valid[r][:, None], msg, program.identity)
+            return merge(agg, combine(msg, ed.dstl[r], nl))
+
+        agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
+        base = row * c
+        old = lax.dynamic_slice(values, (base, 0), (c, nl))
+        vc = lax.dynamic_slice(vconst, (base, 0), (c, nl))
+        new = program.apply(old, agg, vc, n_total)
+        vmask = (base + jnp.arange(c)) < n_live
+        new = jnp.where(vmask[:, None], new, old)
+        delta = jnp.where(vmask[:, None], program.sd_delta(old, new), 0.0)
+        cnt = jnp.maximum(vmask.sum(), 1)
+        return base, new, delta.sum(axis=0) / cnt, delta.max(axis=0)
+
+    def process_iterated(ed: EdgeData, values, vconst, row, t_inner):
+        """Asynchronous hot mode (see make_block_processor): t_inner
+        block-local Gauss-Seidel passes per partition load, all lanes."""
+        nl = values.shape[1]
+        base = row * c
+        old = lax.dynamic_slice(values, (base, 0), (c, nl))
+
+        def inner(_, vals):
+            _, new, _, _ = process_one(ed, vals, vconst, row)
+            return lax.dynamic_update_slice(vals, new, (base, 0))
+
+        vals2 = lax.fori_loop(0, t_inner, inner, values)
+        newb = lax.dynamic_slice(vals2, (base, 0), (c, nl))
+        vmask = (base + jnp.arange(c)) < n_live
+        delta = jnp.where(vmask[:, None], program.sd_delta(old, newb), 0.0)
+        cnt = jnp.maximum(vmask.sum(), 1)
+        return base, newb, delta.sum(axis=0) / cnt, delta.max(axis=0)
+
+    return process_one, process_iterated, gids
+
+
 class StructureAwareEngine:
     """Paper pipeline: build plan -> iterate (schedule, process, repartition)."""
 
@@ -420,32 +551,10 @@ class StructureAwareEngine:
         return self.config.t2 / max(self.plan.num_blocks, 1)
 
     def _inner_depths(self, width: int) -> np.ndarray:
-        """Per-slot Gauss-Seidel depth for the hot sweep, by PSD rank:
-        slot 0 (the hottest block) runs the full ``hot_inner_iters``,
-        halving per rank down to 1 — deep async iteration is spent where
-        the delta mass is, not on every scheduled block. Dense mode keeps
-        the constant depth. Depth depends only on the absolute slot index,
-        so host and fused ranks (and every width bucket) agree."""
-        t = max(self.config.hot_inner_iters, 1)
-        if not self.config.adaptive:
-            return np.full(width, t, dtype=np.int32)
-        return np.maximum(1, t >> np.minimum(np.arange(width), 30)) \
-            .astype(np.int32)
+        return inner_depths(self.config, width)
 
     def _pick_width(self, active: int, psd_host: np.ndarray) -> int:
-        """Dispatch bucket for the live active-set size (non-retired
-        blocks), chosen by the host at repartition boundaries. While an
-        UNSEEN re-heat wave is still in flight the bucket gets 2x headroom:
-        unprocessed blocks are about to re-arm their neighbourhood through
-        the staleness coupling, and a bucket that exactly covers today's
-        active set throttles that propagation (measured: more supersteps at
-        barely-lower per-superstep cost). Once the wave has passed, the
-        active count is trustworthy and the tail narrows for real."""
-        if not self.config.adaptive:
-            return self.config.width
-        if bool((psd_host >= state_lib.UNSEEN).any()):
-            active *= 2
-        return pick_width(self._ladder, active)
+        return dispatch_width(self.config, self._ladder, active, psd_host)
 
     def _active_count(self, calm_host: np.ndarray) -> int:
         if not self.config.adaptive:
@@ -453,22 +562,25 @@ class StructureAwareEngine:
         return int((calm_host < self.config.retire_after).sum())
 
     def _acct_table(self) -> np.ndarray:
-        """(P, len(COUNTER_FIELDS)) host-side accounting row per schedule of
-        a block: [vertices updated, edges processed, 1 load, bytes loaded].
-        The device only counts schedules per block (small exact int32s);
-        the host multiplies through this table at flush time, so metric
-        totals stay exact at any scale. Uses the live ``edge_counts``, not
-        the plan snapshot, so warm streaming runs bill mutated blocks at
-        their current size."""
-        p = self.plan
-        acct = np.zeros((p.num_blocks, 4), dtype=np.int64)
-        for b in range(p.num_blocks):
-            lo, hi = p.block_range(b)
-            e = int(self.edge_counts[b])
-            acct[b] = (hi - lo, e, 1, block_io_bytes(e, p.block_size))
-        return acct
+        return acct_table(self.plan, self.edge_counts)
 
     # -- streaming hooks -----------------------------------------------------
+    def edge_snapshot(self) -> EdgeData:
+        """Device-side DEEP COPY of the current dynamic edge state. The
+        incremental commit path mutates the resident buffers through
+        DONATED scatters, which invalidates any outstanding reference to
+        them — a caller that must keep reading this epoch across future
+        commits (the query service's snapshot isolation) copies first.
+        O(m) device bytes, zero host traffic."""
+        return EdgeData(*(jnp.array(a) for a in self._ed))
+
+    @property
+    def edge_state(self) -> EdgeData:
+        """The LIVE device-resident dynamic edge state. Borrow only where
+        no incremental commit can intervene; across commits, take
+        :meth:`edge_snapshot` instead (the commits donate these buffers)."""
+        return self._ed
+
     def set_edge_data(self, *, src=None, dst_local=None, w=None, valid=None,
                       aux=None) -> None:
         """Swap (parts of) the device-resident dynamic edge state with a

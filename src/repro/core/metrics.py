@@ -87,6 +87,7 @@ class StreamMetrics:
     vertices_reset: int = 0  # non-monotone delete re-heat resets
     bytes_uploaded: int = 0  # actual host->device payload across batches
     bytes_full: int = 0  # what full per-batch re-uploads would have cost
+    snapshots_preserved: int = 0  # epoch pins device-copied for isolation
     # adaptive active-set accounting across warm reconvergences
     blocks_retired: int = 0  # cumulative end-of-batch retired blocks
     width_iterations: float = 0.0  # sum of dispatch width over iterations
@@ -117,6 +118,42 @@ class StreamMetrics:
         d["upload_frac"] = self.upload_frac
         d["latency_per_batch_s"] = self.latency_per_batch_s
         d["mean_dispatch_width"] = self.mean_dispatch_width
+        return d
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Cumulative accounting for a :class:`repro.serve.QueryService`.
+
+    The serving claims ride on three quantities: queries per second
+    (lane batching amortizes partition loads and loop overhead over L
+    queries), lane utilization (admitted lanes over lane slots — padding
+    lanes are masked work), and how often snapshot isolation actually
+    cost something (``epochs_pinned`` vs the stream side's
+    ``snapshots_preserved``)."""
+
+    queries: int = 0  # completed queries
+    lane_batches: int = 0  # lane-engine runs executed
+    lanes_admitted: int = 0  # real queries placed into lane slots
+    lane_slots: int = 0  # total slots incl. padding (utilization denom)
+    run_time_s: float = 0.0  # lane-engine wall time
+    wait_time_s: float = 0.0  # submit -> completion minus own run time
+    iterations: int = 0  # supersteps across lane batches
+    epochs_pinned: int = 0  # distinct epochs queries pinned
+    stale_answers: int = 0  # results served from a pre-ingest epoch
+
+    @property
+    def lane_utilization(self) -> float:
+        return self.lanes_admitted / max(self.lane_slots, 1)
+
+    @property
+    def queries_per_s(self) -> float:
+        return self.queries / max(self.run_time_s, 1e-9)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["lane_utilization"] = self.lane_utilization
+        d["queries_per_s"] = self.queries_per_s
         return d
 
 

@@ -154,6 +154,17 @@ def pick_width(ladder: list[int], active: int) -> int:
     return ladder[0]
 
 
+def admission_order(priority: np.ndarray) -> np.ndarray:
+    """Lane-admission order for the query service: stable descending sort
+    of per-query priorities, ties broken by submit order. The priority is
+    the pinned epoch's activity of the query's seed vertices (paper Eq. 1,
+    the same quantity that ranks UNSEEN blocks at partition time), so the
+    hottest frontiers claim lane slots first — the PSD priority rule
+    applied at admission instead of mid-run."""
+    return np.argsort(-np.asarray(priority, dtype=np.float64),
+                      kind="stable")
+
+
 def adaptive_i2(i2: int, num_blocks: int, perturbed: int,
                 max_scale: int = 8) -> int:
     """Delta-proportional cold-admission cadence for warm restarts: a batch

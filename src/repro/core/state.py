@@ -61,6 +61,44 @@ def warm_calm(num_blocks: int, armed: np.ndarray,
     return calm
 
 
+def init_lane_psd(num_blocks: int, lane_active: np.ndarray) -> np.ndarray:
+    """(P, L) per-lane PSD start state for a multi-lane query run: active
+    lanes carry the UNSEEN sentinel in every block (first-visit coverage is
+    per lane, served by the shared sweep), padding lanes start at 0 —
+    individually converged from the first superstep, so they never hold a
+    block in the active set nor block lane convergence."""
+    lane_active = np.asarray(lane_active, dtype=bool)
+    psd = np.zeros((num_blocks, lane_active.shape[0]), dtype=np.float32)
+    psd[:, lane_active] = UNSEEN
+    return psd
+
+
+def fold_lane_psd(psd: np.ndarray, lane_done: np.ndarray) -> np.ndarray:
+    """(P,) block scheduling priority from (P, L) per-lane PSDs: the max
+    over lanes still running — the union of the lane frontiers, so a block
+    hot in ANY live lane is schedulable and a retired lane stops pricing
+    blocks. Numpy host version (repartition boundaries); the fused lane
+    superstep applies the identical fold in jnp."""
+    masked = np.where(np.asarray(lane_done, dtype=bool)[None, :], 0.0,
+                      np.asarray(psd, dtype=np.float32))
+    return masked.max(axis=1) if masked.shape[1] else \
+        np.zeros(masked.shape[0], np.float32)
+
+
+def fold_lane_psd_device(psd, lane_done):
+    """Traced twin of :func:`fold_lane_psd` for the fused lane superstep."""
+    import jax.numpy as jnp
+    return jnp.max(jnp.where(lane_done[None, :], jnp.float32(0.0), psd),
+                   axis=1)
+
+
+def lane_converged_device(psd, t2: float):
+    """(L,) per-lane SUM(PSD) < T2 — the paper's convergence test applied
+    per lane column (same f32-sum argument as :func:`converged_device`)."""
+    import jax.numpy as jnp
+    return jnp.sum(psd, axis=0) < jnp.float32(t2)
+
+
 def converged(psd: np.ndarray, t2: float) -> bool:
     """Paper §4: the entire graph converges when sum of PSDs < T2."""
     return bool(np.asarray(psd, dtype=np.float64).sum() < t2)

@@ -1,0 +1,12 @@
+"""Query-serving subsystem: batched multi-source sessions over a live
+streaming graph (lanes, epoch pinning, PSD-priority admission)."""
+from repro.core.algorithms import (LANE_FAMILIES, LaneProgram, k_source_bfs,
+                                   k_source_sssp, k_personalized_pagerank)
+from repro.serve.lanes import LaneEngine, LaneResult
+from repro.serve.service import Query, QueryResult, QueryService
+
+__all__ = [
+    "LANE_FAMILIES", "LaneProgram", "k_source_bfs", "k_source_sssp",
+    "k_personalized_pagerank", "LaneEngine", "LaneResult", "Query",
+    "QueryResult", "QueryService",
+]

@@ -43,13 +43,15 @@ just a good initial guess.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 import numpy as np
 
 from repro.core import state as state_lib
 from repro.core.algorithms import VertexProgram
-from repro.core.engine import (EngineConfig, RunResult, StructureAwareEngine,
-                               WarmStart, coupling_from_counts)
+from repro.core.engine import (EdgeData, EngineConfig, RunResult,
+                               StructureAwareEngine, WarmStart,
+                               coupling_from_counts)
 from repro.core.schedule import adaptive_i2
 from repro.core.graph import Graph, edges_of, from_edges, symmetrize
 from repro.core.metrics import StreamMetrics, Timer
@@ -110,6 +112,40 @@ class StreamBatchReport:
         return self.ingest_time_s + self.reconverge_time_s
 
 
+@dataclasses.dataclass
+class EpochState:
+    """A consistent read view of one StreamingEngine epoch — what a query
+    pins at admission (snapshot isolation for the serve subsystem).
+
+    Host-side bookkeeping (coupling counts, degrees, per-block edge
+    counts) is copied eagerly at snapshot time — O(P^2 + n), cheap. The
+    device-resident edge state is NOT copied until an ingest is about to
+    mutate it: :meth:`preserve` (called by the engine's ingest preamble
+    for every live snapshot) takes the O(m) device copy exactly when the
+    epoch would otherwise be lost to a donated commit, so pins on a quiet
+    graph cost nothing and N pins of one epoch share one copy."""
+
+    epoch: int
+    engine: StructureAwareEngine  # geometry + compiled fns of the epoch
+    coupling_counts: np.ndarray  # (P, P) block->block edge counts
+    out_deg: np.ndarray  # (n,) permuted, incremental truth at pin time
+    in_deg: np.ndarray
+    edge_counts: np.ndarray  # (P,) per-block live edge counts
+    _ed: EdgeData | None = None  # preserved copy; None -> engine's live state
+
+    @property
+    def ed(self) -> EdgeData:
+        return self._ed if self._ed is not None else self.engine.edge_state
+
+    @property
+    def preserved(self) -> bool:
+        return self._ed is not None
+
+    def preserve(self) -> None:
+        if self._ed is None:
+            self._ed = self.engine.edge_snapshot()
+
+
 class StreamingEngine:
     """Long-lived engine over a mutating graph (fixed vertex set)."""
 
@@ -123,11 +159,53 @@ class StreamingEngine:
             spare_tiles=stream.spare_tiles, keep_dead_blocks=True)
         self.metrics = StreamMetrics()
         self.n = graph.n
+        # epoch id: bumped once per ingest (and once per plan rebuild,
+        # which happens inside an ingest) — the version a query pins
+        self.epoch = 0
+        self._snapshots: list = []  # weakrefs to unpreserved EpochStates
         s, d, w = edges_of(graph)
         self._build_epoch(s, d, w)
         # bootstrap: one cold run to the initial fixpoint
         self.initial_result: RunResult = self.engine.run()
         self._values = self.initial_result.values
+
+    # -- epoch snapshots (serve-side snapshot isolation) ---------------------
+    def snapshot(self) -> EpochState:
+        """Pin the current epoch. The returned view stays consistent
+        across future :meth:`ingest` calls (the ingest preamble preserves
+        the device state of every live pin before mutating it); it is
+        tracked by weakref, so dropping the last reference makes future
+        ingests free again."""
+        es = EpochState(
+            epoch=self.epoch, engine=self.engine,
+            coupling_counts=self.W.copy(),
+            out_deg=self.out_deg.copy(), in_deg=self.in_deg.copy(),
+            edge_counts=np.array(self.engine.edge_counts))
+        self._snapshots.append(weakref.ref(es))
+        return es
+
+    def _preserve_pinned(self) -> int:
+        """Device-copy every live, not-yet-preserved epoch snapshot — the
+        ingest preamble, run before any commit can donate the pinned
+        buffers. Pins of the same epoch SHARE one copy (they are read-only
+        views of identical state), so N pins cost one O(m) copy. After
+        this every tracked pin is self-contained and the tracking list
+        resets. Returns the number of copies taken."""
+        copies = 0
+        shared: dict[int, EdgeData] = {}
+        for ref in self._snapshots:
+            es = ref()
+            if es is None or es.preserved:
+                continue
+            ed = shared.get(es.epoch)
+            if ed is None:
+                es.preserve()
+                shared[es.epoch] = es.ed
+                copies += 1
+            else:
+                es._ed = ed
+        self._snapshots = []
+        return copies
 
     # -- epoch management ----------------------------------------------------
     def _build_epoch(self, src: np.ndarray, dst: np.ndarray,
@@ -204,6 +282,10 @@ class StreamingEngine:
         c = plan.block_size
         inv = plan.inv
         self._validate(batch)
+        # snapshot isolation: queries pinned to the current epoch keep
+        # reading it — copy their device state before this batch's donated
+        # commits (or plan rebuild) can touch it
+        self.metrics.snapshots_preserved += self._preserve_pinned()
         sym = prog.needs_symmetric
         appended = rebuilt = killed_blocks = 0
         n_reset = 0
@@ -435,6 +517,7 @@ class StreamingEngine:
                 res = self.engine.run()
             if res is not None:
                 self._values = res.values
+        self.epoch += 1  # the mutated graph is the next epoch
 
         n_bumped = (int(((aux_bump > 0) & ~dirty).sum())
                     if aux_bump is not None else 0)

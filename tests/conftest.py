@@ -35,6 +35,22 @@ def bellman_ford_oracle(g, src=0, unit=False):
     return dist
 
 
+def ppr_oracle(g, reset_ids, d=0.85, iters=500):
+    """Personalized PageRank power iteration: x = (1-d) r + d A x with r
+    uniform over ``reset_ids``; dangling mass vanishes (aux = max(out, 1)),
+    matching the engine's pagerank semantics."""
+    r = np.zeros(g.n)
+    r[np.asarray(reset_ids, dtype=np.int64)] = 1.0 / len(reset_ids)
+    s, dst, _ = G.edges_of(g)
+    outdeg = np.maximum(g.out_deg, 1).astype(np.float64)
+    x = r.copy()
+    for _ in range(iters):
+        agg = np.zeros(g.n)
+        np.add.at(agg, dst, x[s] / outdeg[s])
+        x = (1 - d) * r + d * agg
+    return x
+
+
 def cc_oracle(g):
     """Union-find component roots on the symmetrized graph."""
     parent = list(range(g.n))

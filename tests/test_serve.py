@@ -1,0 +1,345 @@
+"""Query-serving subsystem: multi-lane execution, session batching, and
+the two acceptance properties — (1) the single-lane service path
+reproduces the engine trajectory EXACTLY (serving is a strict superset of
+the engine, not a fork), and (2) snapshot isolation: answers under
+concurrent ingest equal answers on the pinned epoch's frozen graph,
+including delete batches."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from conftest import bellman_ford_oracle, ppr_oracle
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core.engine import EngineConfig, StructureAwareEngine
+from repro.serve import Query, QueryService
+from repro.stream import (DeltaBatch, StreamConfig, StreamingEngine,
+                          synthetic_stream)
+from repro.stream.delta import apply_to_coo
+
+CFG = EngineConfig(t2=1e-9, width=4, block_size=128)
+
+
+def _close(a, b, **kw):
+    return np.allclose(np.minimum(a, 1e18), np.minimum(b, 1e18), **kw)
+
+
+def _frozen(g, batches, upto):
+    s, d, w = G.edges_of(g)
+    for b in batches[:upto]:
+        s, d, w = apply_to_coo(s, d, w, g.n, b)
+    return G.from_edges(g.n, s, d, w)
+
+
+@pytest.fixture(scope="module")
+def stream_pl():
+    g = G.powerlaw_graph(900, avg_deg=5, seed=7, weighted=True)
+    return g, StreamingEngine(g, A.pagerank(), CFG)
+
+
+# -- single-lane parity: serving is a strict superset of the engine ----------
+def test_single_lane_reproduces_engine_trajectory(stream_pl):
+    """A one-query service run must be indistinguishable from a plain
+    engine run of the same program on the same epoch: same iteration
+    count, same values (bitwise), same update/load/byte accounting — the
+    shared decision helpers make the schedules identical and the lane
+    arithmetic is the engine arithmetic with a unit lane axis."""
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=1)
+    svc.submit(Query(kind="sssp", source=3))
+    r = svc.run_pending()[0]
+    ref = StructureAwareEngine(g, A.sssp(3), se.config).run()
+    assert r.converged and ref.metrics.converged
+    assert r.iterations == ref.metrics.iterations
+    assert r.batch_iterations == ref.metrics.iterations
+    assert np.array_equal(r.values, ref.values)
+
+
+def test_padding_lanes_do_not_perturb_trajectory(stream_pl):
+    """A single admitted query in a padded L=4 batch takes the same
+    trajectory as the engine: padding lanes start individually converged,
+    never hold a block in the active set, and are masked out of the
+    folded block priority."""
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=4)
+    svc.submit(Query(kind="sssp", source=3))
+    r = svc.run_pending()[0]
+    ref = StructureAwareEngine(g, A.sssp(3), se.config).run()
+    assert r.batch_iterations == ref.metrics.iterations
+    assert np.array_equal(r.values, ref.values)
+    m = svc.metrics
+    assert m.lanes_admitted == 1 and m.lane_slots == 4
+    assert m.lane_utilization == pytest.approx(0.25)
+
+
+def test_lane_engine_counters_match_engine(stream_pl):
+    """Metric accounting of a unit-lane batch equals the engine's:
+    loads/bytes are billed per block schedule, updates/edges per admitted
+    lane — with one lane both reduce to the engine's numbers exactly."""
+    import jax.numpy as jnp
+    from repro.core.engine import coupling_from_counts
+    from repro.serve.lanes import LaneEngine
+    g, se = stream_pl
+    es = se.snapshot()
+    fam = A.k_source_sssp()
+    le = LaneEngine(es.engine, fam)
+    vals0, vconst = fam.lane_init(se.n, [3])
+    res = le.run(
+        ed=es.ed._replace(aux=jnp.zeros(se.n, jnp.float32)),
+        coupling=coupling_from_counts(es.coupling_counts, fam,
+                                      es.engine.plan.block_size),
+        values0=vals0, vconst=vconst, lane_active=np.array([True]),
+        edge_counts=es.edge_counts)
+    ref = StructureAwareEngine(g, A.sssp(3), se.config).run()
+    for f in ("iterations", "updates", "edges_processed", "block_loads",
+              "bytes_loaded", "converged"):
+        assert getattr(res.metrics, f) == getattr(ref.metrics, f), f
+
+
+# -- multi-lane correctness ---------------------------------------------------
+def test_k_source_sssp_lanes_match_oracles(stream_pl):
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=4)
+    sources = [0, 7, 42, 130]
+    qids = [svc.submit(Query(kind="sssp", source=s)) for s in sources]
+    res = {r.query_id: r for r in svc.run_pending()}
+    assert len(res) == 4
+    by_qid = dict(zip(qids, sources))
+    for qid, r in res.items():
+        oracle = bellman_ford_oracle(g, by_qid[qid])
+        assert r.converged
+        assert _close(r.values, oracle.astype(np.float32), rtol=1e-5,
+                      atol=1e-3)
+    # one fused batch served all four queries
+    assert svc.metrics.lane_batches == 1
+    assert svc.metrics.queries == 4
+
+
+def test_k_source_bfs_lanes_match_oracles(stream_pl):
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=2)
+    qids = [svc.submit(Query(kind="bfs", source=s)) for s in (1, 9)]
+    res = {r.query_id: r for r in svc.run_pending()}
+    for qid, s in zip(qids, (1, 9)):
+        oracle = bellman_ford_oracle(g, s, unit=True)
+        assert _close(res[qid].values, oracle.astype(np.float32),
+                      rtol=1e-5, atol=1e-3)
+
+
+def test_ppr_lanes_match_power_iteration(stream_pl):
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=2)
+    resets = [[0], [5, 17, 200]]
+    qids = [svc.submit(Query(kind="ppr", reset=r)) for r in resets]
+    res = {r.query_id: r for r in svc.run_pending()}
+    for qid, rs in zip(qids, resets):
+        oracle = ppr_oracle(g, rs)
+        assert res[qid].converged
+        assert np.allclose(res[qid].values, oracle, rtol=1e-3, atol=1e-6)
+        # a personalized vector concentrates mass near its reset set
+        assert res[qid].values[rs[0]] > 1.0 / g.n
+
+
+def test_mixed_kinds_batch_per_family(stream_pl):
+    """sssp and ppr queries cannot share a lane batch (different edge_map
+    / combine): the session scheduler groups by family and runs one
+    fused batch per group."""
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=4)
+    svc.submit(Query(kind="sssp", source=2))
+    svc.submit(Query(kind="ppr", reset=[3]))
+    svc.submit(Query(kind="sssp", source=11))
+    res = svc.run_pending()
+    assert len(res) == 3
+    assert svc.metrics.lane_batches == 2
+    kinds = {r.kind for r in res}
+    assert kinds == {"sssp", "ppr"}
+
+
+def test_admission_priority_hottest_frontier_first(stream_pl):
+    """PSD-priority admission: with more pending queries than lanes, the
+    lane slots go to the hottest seed frontiers (paper Eq. 1 activity)
+    first; ties keep submit order."""
+    g, se = stream_pl
+    act = se.activity()
+    cold_v = int(np.argmin(act))
+    hot_v = int(np.argmax(act))
+    svc = QueryService(se, max_lanes=2)
+    q_cold = svc.submit(Query(kind="sssp", source=cold_v))
+    q_hot = svc.submit(Query(kind="sssp", source=hot_v))
+    q_mid = svc.submit(Query(kind="sssp", source=int(np.argsort(act)[g.n // 2])))
+    res = svc.run_pending()
+    # completion order is batch order: the hot query must land in the
+    # first batch of two, the cold one waits for the second
+    first_batch = [r.query_id for r in res if r.lanes == 2]
+    second_batch = [r.query_id for r in res if r.lanes == 1]
+    assert q_hot in first_batch and q_mid in first_batch
+    assert second_batch == [q_cold]
+
+
+# -- snapshot isolation -------------------------------------------------------
+@given(seed=st.integers(0, 15), kind=st.sampled_from(["sssp", "ppr"]))
+@settings(max_examples=6, deadline=None)
+def test_snapshot_isolation_property(seed, kind):
+    """Acceptance property: a query admitted at epoch e answers on the
+    graph AS OF epoch e — bit-for-bit the frozen snapshot's fixpoint —
+    no matter how many delta batches (including deletes) are ingested
+    between submission and execution."""
+    g = G.powerlaw_graph(400, avg_deg=4, seed=seed, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    svc = QueryService(se, max_lanes=2, prewarm=False)
+    batches = synthetic_stream(g, 2, 50, seed=seed + 1, delete_frac=0.4,
+                               weighted=True)
+    mk = (lambda s: Query(kind="sssp", source=s)) if kind == "sssp" else \
+        (lambda s: Query(kind="ppr", reset=[s, (s + 3) % g.n]))
+    q0 = svc.submit(mk(0))  # pinned to epoch 0 (the original graph)
+    svc.ingest(batches[0])
+    q1 = svc.submit(mk(0))  # pinned to epoch 1
+    svc.ingest(batches[1])  # epoch-1 pin must survive this one too
+    res = {r.query_id: r for r in svc.run_pending()}
+    assert res[q0].epoch == 0 and res[q1].epoch == 1
+    for qid, upto in ((q0, 0), (q1, 1)):
+        frozen = _frozen(g, batches, upto)
+        if kind == "sssp":
+            oracle = bellman_ford_oracle(frozen, 0).astype(np.float32)
+            assert _close(res[qid].values, oracle, rtol=1e-5, atol=1e-3), \
+                f"epoch {upto} answer diverged from its frozen graph"
+        else:
+            oracle = ppr_oracle(frozen, [0, 3])
+            assert np.allclose(res[qid].values, oracle, rtol=1e-3,
+                               atol=1e-6)
+    assert svc.metrics.stale_answers == 2  # both served after more ingests
+    assert se.metrics.snapshots_preserved >= 1
+
+
+def test_snapshot_survives_plan_rebuild():
+    """The hard isolation case: the concurrent ingest overflows a tile run
+    and rebuilds the whole plan (new permutation, new engine, new
+    compiled functions) — the pinned query must still answer on its
+    frozen pre-ingest graph through the preserved epoch state."""
+    g = G.powerlaw_graph(300, avg_deg=4, seed=1, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG,
+                         StreamConfig(tile_slack=0.0, spare_tiles=0))
+    svc = QueryService(se, max_lanes=2, prewarm=False)
+    qid = svc.submit(Query(kind="sssp", source=0))
+    burst = DeltaBatch(ins_src=np.arange(250) % g.n,
+                       ins_dst=np.full(250, 7),
+                       ins_w=np.ones(250, np.float32),
+                       del_src=[], del_dst=[])
+    rep = svc.ingest(burst)
+    assert rep.plan_rebuild
+    r = {x.query_id: x for x in svc.run_pending()}[qid]
+    oracle = bellman_ford_oracle(g, 0).astype(np.float32)  # PRE-burst graph
+    assert r.epoch == 0
+    assert _close(r.values, oracle, rtol=1e-5, atol=1e-3)
+    # and a fresh query sees the post-burst epoch
+    q2 = svc.submit(Query(kind="sssp", source=0))
+    r2 = {x.query_id: x for x in svc.run_pending()}[q2]
+    oracle2 = bellman_ford_oracle(_frozen(g, [burst], 1), 0) \
+        .astype(np.float32)
+    assert r2.epoch == 1
+    assert _close(r2.values, oracle2, rtol=1e-5, atol=1e-3)
+
+
+def test_pins_cost_nothing_on_quiet_graph(stream_pl):
+    """Epoch pinning is free until an ingest actually lands: no device
+    copy happens for queries that run before any mutation."""
+    g, se = stream_pl
+    before = se.metrics.snapshots_preserved
+    svc = QueryService(se, max_lanes=2, prewarm=False)
+    svc.submit(Query(kind="bfs", source=0))
+    svc.run_pending()
+    assert se.metrics.snapshots_preserved == before
+
+
+# -- validation / bookkeeping -------------------------------------------------
+def test_query_validation(stream_pl):
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=2, prewarm=False)
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="nope", source=0))
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="sssp", source=g.n))
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="sssp"))
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="ppr"))
+    # malformed ppr resets are rejected AT SUBMIT (a bad lane admitted
+    # into a batch would take its batchmates down at run time)
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="ppr", reset=[]))
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="ppr", reset=[g.n]))
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="ppr", reset=[-1]))
+    with pytest.raises(ValueError):  # dense reset that is not a distribution
+        svc.submit(Query(kind="ppr",
+                         reset=np.full(g.n, 2.0 / g.n, np.float32)))
+    with pytest.raises(ValueError):
+        QueryService(se, max_lanes=0)
+    assert svc.pending == 0
+
+
+def test_failing_batch_does_not_discard_other_queries(stream_pl, monkeypatch):
+    """A batch that errors mid-run consumes only its own queries: every
+    other pending batch stays queued and is served by the next
+    run_pending call."""
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=2, prewarm=False)
+    q_ppr = svc.submit(Query(kind="ppr", reset=[3]))
+    q_sssp = svc.submit(Query(kind="sssp", source=1))
+    calls = {"n": 0}
+    real = QueryService._run_batch
+
+    def boom_first(self, pend):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("lane batch died")
+        return real(self, pend)
+
+    monkeypatch.setattr(QueryService, "_run_batch", boom_first)
+    with pytest.raises(RuntimeError):
+        svc.run_pending()
+    assert svc.pending == 1  # the other batch survived the failure
+    res = svc.run_pending()
+    assert len(res) == 1
+    assert res[0].query_id in (q_ppr, q_sssp)
+
+
+def test_same_epoch_pins_share_one_device_copy():
+    """N pins of one epoch cost ONE O(m) device copy at the next ingest,
+    not N (the pins are read-only views of identical state)."""
+    g = G.powerlaw_graph(250, avg_deg=4, seed=2, weighted=True)
+    se = StreamingEngine(g, A.pagerank(), CFG)
+    pins = [se.snapshot() for _ in range(3)]
+    se.ingest(DeltaBatch.of(ins=[(0, 1)]))
+    assert se.metrics.snapshots_preserved == 1
+    assert all(p.preserved for p in pins)
+    assert pins[1].ed is pins[0].ed and pins[2].ed is pins[0].ed
+
+
+def test_symmetric_host_rejects_asymmetric_family():
+    """A cc host engine stores the symmetrized tiles; traversal lanes over
+    them would answer the wrong graph — refused at admission."""
+    g = G.powerlaw_graph(200, avg_deg=3, seed=0)
+    se = StreamingEngine(g, A.cc(), CFG)
+    svc = QueryService(se, max_lanes=2, prewarm=False)
+    with pytest.raises(ValueError):
+        svc.submit(Query(kind="sssp", source=0))
+
+
+def test_serve_metrics_accumulate(stream_pl):
+    g, se = stream_pl
+    svc = QueryService(se, max_lanes=2)
+    for s in (0, 1, 2):
+        svc.submit(Query(kind="bfs", source=s))
+    res = svc.run_pending()
+    m = svc.metrics
+    assert m.queries == 3 and m.lane_batches == 2
+    assert m.lanes_admitted == 3 and m.lane_slots == 4
+    assert m.run_time_s > 0 and m.iterations > 0
+    assert m.epochs_pinned >= 1
+    d = m.as_dict()
+    assert "queries_per_s" in d and "lane_utilization" in d
+    assert all(r.run_s > 0 for r in res)
+    assert svc.pending == 0
