@@ -48,9 +48,9 @@ def main() -> None:
                     help="graph size for the engine benchmarks")
     ap.add_argument("--suites", default=None,
                     help="comma list: runtime,convergence,io,kernels,"
-                         "streaming,serving — plus serving_smoke, a cheap "
-                         "2-lane serving subset (small n) CI can run "
-                         "without the full matrix")
+                         "streaming,stream_subblock,serving — plus "
+                         "serving_smoke, a cheap 2-lane serving subset "
+                         "(small n) CI can run without the full matrix")
     ap.add_argument("--only", default=None,
                     help="deprecated alias of --suites")
     ap.add_argument("--lanes", type=int, default=8,
@@ -72,6 +72,9 @@ def main() -> None:
         "io": lambda: bench_io.run(args.n),
         "kernels": bench_kernels.run,
         "streaming": lambda: bench_streaming.run(args.n),
+        # hierarchical partitions: sub-block vs block activity tracking
+        # on small warm batches (the P-pigeonhole comparison)
+        "stream_subblock": lambda: bench_streaming.run_subblock(args.n),
         "serving": lambda: bench_serving.run(args.n, lanes=args.lanes),
         # CI smoke subset: tiny graph, 2 lanes — exercises the whole
         # serve stack (lanes, pinning, churn) without the full matrix

@@ -25,11 +25,15 @@ def main():
     ap.add_argument("--n", type=int, default=10000)
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=150)
+    ap.add_argument("--subblocks", type=int, default=1,
+                    help="sub-blocks per partition block (hierarchical "
+                         "activity tracking; 1 = flat blocks)")
     args = ap.parse_args()
 
     g = G.core_periphery_graph(args.n, avg_deg=8, seed=1, chords=1,
                                weighted=True)
-    cfg = EngineConfig(t2=1e-8, width=16, block_size=512)
+    cfg = EngineConfig(t2=1e-8, width=16, block_size=512,
+                       subblocks=args.subblocks)
     prog = A.pagerank()
 
     warm = StreamingEngine(g, prog, cfg)
@@ -69,6 +73,11 @@ def main():
           f"mean dispatch width {mw.mean_dispatch_width:.1f} "
           f"of {warm.engine.config.width}, hot-depth histogram "
           f"{dict(sorted(mw.inner_depth_hist.items(), reverse=True))}")
+    if args.subblocks > 1:
+        print(f"hierarchical partitions (S={args.subblocks}): mean dirty "
+              f"sub-block fraction {mw.subblock_dirty_frac:.2f} vs block "
+              f"fraction {mw.dirty_frac:.2f}, mean sub-blocks swept per "
+              f"block load {mw.mean_subblock_dispatch:.2f}")
 
 
 if __name__ == "__main__":

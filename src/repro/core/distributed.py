@@ -62,9 +62,13 @@ class DistributedEngine(StructureAwareEngine):
         # adaptive active-set model is disabled: the dispatch width IS the
         # mesh (devices x blocks-per-device) — shrinking it would idle
         # devices, and the per-rank depth ladder would skew the round-robin
-        # load balance this engine relies on.
+        # load balance this engine relies on. Sub-block tracking is pinned
+        # flat too: the group-padded storages this engine dispatches over
+        # have no masked sweep path (per-shard sub-block balance is the
+        # follow-up the hierarchical plan sets up, not this engine).
         config = dataclasses.replace(config, width=self.ndev * bpd,
-                                     fused=False, adaptive=False)
+                                     fused=False, adaptive=False,
+                                     subblocks=1)
         self.bpd = bpd
         super().__init__(graph, program, config)
 
@@ -126,7 +130,9 @@ class DistributedEngine(StructureAwareEngine):
                 values_out = lax.pmax(values_l, axis)
 
             def reconcile(local, base_in):
-                masked = jnp.where(bmask, local, _NEG)
+                # psd/dmax carry a trailing (singleton) sub-block axis
+                m = bmask[:, None] if local.ndim == 2 else bmask
+                masked = jnp.where(m, local, _NEG)
                 mx = lax.pmax(masked, axis)
                 return jnp.where(mx > _NEG / 2, mx, base_in)
 

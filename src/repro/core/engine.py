@@ -79,6 +79,27 @@ tested):
 ``adaptive=False`` restores the fixed-slate dispatch (constant width,
 constant inner depth, floor-prune only) with the exact pre-adaptive
 trajectory.
+
+Hierarchical partitions (``EngineConfig.subblocks``, default 1). Every
+block is split into S equal contiguous sub-ranges and the activity state
+grows a trailing sub-block axis: psd/dmax/calm are (P, S) device arrays.
+Scheduling and repartitioning stay BLOCK-granular (block priority = max
+over sub-blocks, preserving Eq. 1), but inside a scheduled block the
+sweep masks sub-blocks whose PSD sits under the pruning floor: their
+vertices keep their values, their PSD/calm rows are left to retire, and
+edge tiles covering only masked sub-ranges are skipped (tiles inherit
+the CSC dst order, so a tile spans few contiguous sub-ranges). The
+staleness coupling is SUB-granular at S > 1 — the count matrix grows a
+destination-sub axis, (P, P, S), so an upstream delta re-arms only the
+sub-ranges that actually receive edges from the moving block; without
+this a single bump would arm whole rows and the P-pigeonhole would just
+reappear one level down. The same t2/P floor argument that makes block
+pruning safe makes sub-block pruning safe (a frozen sub-block's residual
+is below the floor by construction, and any upstream movement re-arms it
+through its own coupling column). ``subblocks=1`` keeps psd at (P, 1)
+and the coupling at (P, P) — every fold is a bitwise identity and the
+sweep bodies trace to the exact flat code path, so the PR-5 trajectory
+is reproduced value for value.
 """
 from __future__ import annotations
 
@@ -119,6 +140,7 @@ class EngineConfig:
     use_pallas: bool = False  # sum-combine via the Pallas spmv kernel
     fused: bool = True  # device-resident lax.while_loop superstep
     adaptive: bool = True  # active-set execution (False = fixed-slate)
+    subblocks: int = 1  # sub-blocks per block (hierarchical activity tracking)
     retire_after: int = 3  # consecutive sub-floor supersteps before retire
     min_width: int = 2  # narrowest dispatch-width bucket
     tile_slack: float = 0.0  # spare tile capacity per block (streaming)
@@ -168,13 +190,37 @@ class EdgeData(NamedTuple):
     dstl: jax.Array  # (n_tiles, TILE) int32
     w: jax.Array  # (n_tiles, TILE) float32
     valid: jax.Array  # (n_tiles, TILE) bool
+    cov: jax.Array  # (n_tiles, S) bool — sub-block dst coverage per tile
     aux: jax.Array  # (n,) float32 per-vertex constant (e.g. out-degree)
 
 
-def edge_data(store: TiledStorage, aux) -> EdgeData:
+def tile_coverage(dst_local, valid, subblocks: int,
+                  block_size: int | None = None) -> np.ndarray:
+    """(n_tiles, S) bool: which of a block's S sub-ranges each tile's VALID
+    destinations land in. Coverage is a function of tile structure only
+    (dstl/valid), not of values, so it is computed host-side once per
+    epoch — and per touched row on streaming commits — instead of by a
+    scatter inside every traced tile visit. At S = 1 it degenerates to
+    'tile has any valid slot' (unused by the flat trace)."""
+    d = np.asarray(dst_local)
+    v = np.asarray(valid, dtype=bool)
+    if subblocks <= 1:
+        return v.any(axis=1, keepdims=True)
+    sub = block_size // subblocks
+    cov = np.zeros((d.shape[0], subblocks), dtype=bool)
+    ii, jj = np.nonzero(v)
+    cov[ii, d[ii, jj] // sub] = True
+    return cov
+
+
+def edge_data(store: TiledStorage, aux, subblocks: int = 1,
+              block_size: int | None = None) -> EdgeData:
     return EdgeData(src=jnp.asarray(store.src),
                     dstl=jnp.asarray(store.dst_local),
                     w=jnp.asarray(store.w), valid=jnp.asarray(store.valid),
+                    cov=jnp.asarray(tile_coverage(
+                        store.dst_local, store.valid, subblocks,
+                        block_size)),
                     aux=jnp.asarray(aux))
 
 
@@ -296,17 +342,28 @@ def make_block_processor(program: VertexProgram, store: EdgeStorage, aux,
 
 def make_tiled_processor(program: VertexProgram, store: TiledStorage,
                          block_size: int, n_live: int, n_total: int,
-                         use_pallas: bool):
+                         use_pallas: bool, subblocks: int = 1):
     """Block processor over the unified tiled layout: ``row`` is the GLOBAL
     block id and the per-block work is a fori over that block's tile rows,
     so compute scales with the block's true edge count rather than a shared
     padded capacity. Only the tile GEOMETRY (tile_start/tile_cnt) is closed
     over; the edge arrays and aux arrive per call as an :class:`EdgeData`,
-    so streaming mutations never invalidate the trace."""
+    so streaming mutations never invalidate the trace.
+
+    With ``subblocks = S > 1`` the processors take a ``sub_act`` (S,) bool
+    mask (which of the block's S equal sub-ranges are live) and return
+    PER-SUB-BLOCK (S,) mean/max deltas. Masked sub-ranges keep their old
+    values and report no delta, and a tile whose valid destinations all
+    land in masked sub-ranges is skipped entirely (tiles are CSC-ordered,
+    so each covers a narrow dst range — this is where a one-hot-sub block
+    stops paying its whole edge slice). ``sub_act=None`` (the S = 1 path)
+    traces to EXACTLY the flat per-block code — bitwise parity with the
+    non-hierarchical engine is by construction, not by rounding luck."""
     tile_start = jnp.asarray(store.tile_start, dtype=jnp.int32)
     tile_cnt = jnp.asarray(store.tile_cnt, dtype=jnp.int32)
     gids = jnp.arange(store.num_blocks, dtype=jnp.int32)
     c = block_size
+    sub = c // max(subblocks, 1)
 
     if program.combine == "sum":
         agg0 = jnp.zeros(c, jnp.float32)
@@ -318,10 +375,10 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage,
         agg0 = jnp.full(c, program.identity)
         merge = jnp.maximum
 
-    def process_one(ed: EdgeData, values, row):
+    def process_one(ed: EdgeData, values, row, sub_act=None):
         t0 = tile_start[row]
 
-        def tile_body(t, agg):
+        def tile_compute(t, agg):
             r = t0 + t
             e_src = ed.src[r]
             msg = program.edge_map(values[e_src], ed.aux[e_src], ed.w[r])
@@ -330,38 +387,66 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage,
                          _combine_local(program, msg, ed.dstl[r], c,
                                         use_pallas))
 
+        if sub_act is None:
+            tile_body = tile_compute
+        else:
+            def tile_body(t, agg):
+                r = t0 + t
+                # skip the gather/combine when every sub-range this tile's
+                # valid destinations cover (ed.cov — precomputed per epoch,
+                # maintained per touched row by streaming commits) is
+                # masked: identity branch — the vmapped cold sweep lowers
+                # this to a select, the sequential hot sweep skips for real
+                return lax.cond((ed.cov[r] & sub_act).any(),
+                                lambda a: tile_compute(t, a),
+                                lambda a: a, agg)
+
         agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
         base = row * c
         old = lax.dynamic_slice(values, (base,), (c,))
         new = program.apply(old, agg, n_total)
         vmask = (base + jnp.arange(c)) < n_live
-        new = jnp.where(vmask, new, old)
-        delta = jnp.where(vmask, program.sd_delta(old, new), 0.0)
-        cnt = jnp.maximum(vmask.sum(), 1)
-        return base, new, delta.sum() / cnt, delta.max()
+        if sub_act is None:
+            new = jnp.where(vmask, new, old)
+            delta = jnp.where(vmask, program.sd_delta(old, new), 0.0)
+            cnt = jnp.maximum(vmask.sum(), 1)
+            return base, new, delta.sum() / cnt, delta.max()
+        keep = vmask & jnp.repeat(sub_act, sub)
+        new = jnp.where(keep, new, old)
+        delta = jnp.where(keep, program.sd_delta(old, new), 0.0)
+        dsub = delta.reshape(subblocks, sub)
+        cnt = jnp.maximum(vmask.reshape(subblocks, sub).sum(axis=1), 1)
+        return base, new, dsub.sum(axis=1) / cnt, dsub.max(axis=1)
 
-    def process_iterated(ed: EdgeData, values, row, t_inner):
+    def process_iterated(ed: EdgeData, values, row, t_inner, sub_act=None):
         """Asynchronous hot mode (see make_block_processor): t_inner
         block-local Gauss-Seidel passes per partition load."""
         base = row * c
         old = lax.dynamic_slice(values, (base,), (c,))
 
         def inner(_, vals):
-            _, new, _, _ = process_one(ed, vals, row)
+            _, new, _, _ = process_one(ed, vals, row, sub_act)
             return lax.dynamic_update_slice(vals, new, (base,))
 
         vals2 = lax.fori_loop(0, t_inner, inner, values)
         newb = lax.dynamic_slice(vals2, (base,), (c,))
         vmask = (base + jnp.arange(c)) < n_live
-        delta = jnp.where(vmask, program.sd_delta(old, newb), 0.0)
-        cnt = jnp.maximum(vmask.sum(), 1)
-        return base, newb, delta.sum() / cnt, delta.max()
+        if sub_act is None:
+            delta = jnp.where(vmask, program.sd_delta(old, newb), 0.0)
+            cnt = jnp.maximum(vmask.sum(), 1)
+            return base, newb, delta.sum() / cnt, delta.max()
+        keep = vmask & jnp.repeat(sub_act, sub)
+        delta = jnp.where(keep, program.sd_delta(old, newb), 0.0)
+        dsub = delta.reshape(subblocks, sub)
+        cnt = jnp.maximum(vmask.reshape(subblocks, sub).sum(axis=1), 1)
+        return base, newb, dsub.sum(axis=1) / cnt, dsub.max(axis=1)
 
     return process_one, process_iterated, gids
 
 
 def make_lane_processor(program: LaneProgram, store: TiledStorage,
-                        block_size: int, n_live: int, n_total: int):
+                        block_size: int, n_live: int, n_total: int,
+                        subblocks: int = 1):
     """Lane-axis generalization of :func:`make_tiled_processor`: vertex
     values are ``(values_len, L)`` and one pass over a block's edge tiles
     advances every lane — the edge slice (src ids, weights, validity) is
@@ -373,11 +458,17 @@ def make_lane_processor(program: LaneProgram, store: TiledStorage,
     (personalized restart vectors); families that ignore it get zeros.
     Per-block results are per-lane vectors: (base, new (C, L), mean-delta
     (L,), max-delta (L,)) — the (P, L) PSD state the lane superstep
-    schedules on."""
+    schedules on. With ``subblocks = S > 1`` the processors additionally
+    take a shared (S,) ``sub_act`` mask (lane-folded: a sub-range is live
+    if ANY running lane prices it over the floor) and the deltas grow a
+    leading sub-block axis — (S, L) — mirroring
+    :func:`make_tiled_processor`; ``sub_act=None`` is the exact flat
+    path."""
     tile_start = jnp.asarray(store.tile_start, dtype=jnp.int32)
     tile_cnt = jnp.asarray(store.tile_cnt, dtype=jnp.int32)
     gids = jnp.arange(store.num_blocks, dtype=jnp.int32)
     c = block_size
+    sub = c // max(subblocks, 1)
 
     if program.combine == "sum":
         def combine(msg, dstl, nl):
@@ -392,7 +483,7 @@ def make_lane_processor(program: LaneProgram, store: TiledStorage,
             return jnp.full((c, nl), program.identity).at[dstl].max(msg)
         merge = jnp.maximum
 
-    def process_one(ed: EdgeData, values, vconst, row):
+    def process_one(ed: EdgeData, values, vconst, row, sub_act=None):
         nl = values.shape[1]
         t0 = tile_start[row]
         if program.combine == "sum":
@@ -400,12 +491,21 @@ def make_lane_processor(program: LaneProgram, store: TiledStorage,
         else:
             agg0 = jnp.full((c, nl), program.identity)
 
-        def tile_body(t, agg):
+        def tile_compute(t, agg):
             r = t0 + t
             e_src = ed.src[r]
             msg = program.edge_map(values[e_src], ed.aux[e_src], ed.w[r])
             msg = jnp.where(ed.valid[r][:, None], msg, program.identity)
             return merge(agg, combine(msg, ed.dstl[r], nl))
+
+        if sub_act is None:
+            tile_body = tile_compute
+        else:
+            def tile_body(t, agg):
+                r = t0 + t
+                return lax.cond((ed.cov[r] & sub_act).any(),
+                                lambda a: tile_compute(t, a),
+                                lambda a: a, agg)
 
         agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
         base = row * c
@@ -413,12 +513,22 @@ def make_lane_processor(program: LaneProgram, store: TiledStorage,
         vc = lax.dynamic_slice(vconst, (base, 0), (c, nl))
         new = program.apply(old, agg, vc, n_total)
         vmask = (base + jnp.arange(c)) < n_live
-        new = jnp.where(vmask[:, None], new, old)
-        delta = jnp.where(vmask[:, None], program.sd_delta(old, new), 0.0)
-        cnt = jnp.maximum(vmask.sum(), 1)
-        return base, new, delta.sum(axis=0) / cnt, delta.max(axis=0)
+        if sub_act is None:
+            new = jnp.where(vmask[:, None], new, old)
+            delta = jnp.where(vmask[:, None], program.sd_delta(old, new),
+                              0.0)
+            cnt = jnp.maximum(vmask.sum(), 1)
+            return base, new, delta.sum(axis=0) / cnt, delta.max(axis=0)
+        keep = vmask & jnp.repeat(sub_act, sub)
+        new = jnp.where(keep[:, None], new, old)
+        delta = jnp.where(keep[:, None], program.sd_delta(old, new), 0.0)
+        dsub = delta.reshape(subblocks, sub, nl)
+        cnt = jnp.maximum(vmask.reshape(subblocks, sub).sum(axis=1), 1)
+        return (base, new, dsub.sum(axis=1) / cnt[:, None],
+                dsub.max(axis=1))
 
-    def process_iterated(ed: EdgeData, values, vconst, row, t_inner):
+    def process_iterated(ed: EdgeData, values, vconst, row, t_inner,
+                         sub_act=None):
         """Asynchronous hot mode (see make_block_processor): t_inner
         block-local Gauss-Seidel passes per partition load, all lanes."""
         nl = values.shape[1]
@@ -426,15 +536,23 @@ def make_lane_processor(program: LaneProgram, store: TiledStorage,
         old = lax.dynamic_slice(values, (base, 0), (c, nl))
 
         def inner(_, vals):
-            _, new, _, _ = process_one(ed, vals, vconst, row)
+            _, new, _, _ = process_one(ed, vals, vconst, row, sub_act)
             return lax.dynamic_update_slice(vals, new, (base, 0))
 
         vals2 = lax.fori_loop(0, t_inner, inner, values)
         newb = lax.dynamic_slice(vals2, (base, 0), (c, nl))
         vmask = (base + jnp.arange(c)) < n_live
-        delta = jnp.where(vmask[:, None], program.sd_delta(old, newb), 0.0)
-        cnt = jnp.maximum(vmask.sum(), 1)
-        return base, newb, delta.sum(axis=0) / cnt, delta.max(axis=0)
+        if sub_act is None:
+            delta = jnp.where(vmask[:, None], program.sd_delta(old, newb),
+                              0.0)
+            cnt = jnp.maximum(vmask.sum(), 1)
+            return base, newb, delta.sum(axis=0) / cnt, delta.max(axis=0)
+        keep = vmask & jnp.repeat(sub_act, sub)
+        delta = jnp.where(keep[:, None], program.sd_delta(old, newb), 0.0)
+        dsub = delta.reshape(subblocks, sub, nl)
+        cnt = jnp.maximum(vmask.reshape(subblocks, sub).sum(axis=1), 1)
+        return (base, newb, dsub.sum(axis=1) / cnt[:, None],
+                dsub.max(axis=1))
 
     return process_one, process_iterated, gids
 
@@ -452,7 +570,8 @@ class StructureAwareEngine:
             sample_frac=config.sample_frac, hot_ratio=config.hot_ratio,
             seed=config.seed, tile_slack=config.tile_slack,
             spare_tiles=config.spare_tiles,
-            keep_dead=config.keep_dead_blocks)
+            keep_dead=config.keep_dead_blocks,
+            subblocks=config.subblocks)
         vals0, aux0 = program.init(g)  # original ids ...
         self.values0 = vals0[self.plan.order]  # ... permuted to plan order
         self.aux = jnp.asarray(aux0[self.plan.order])
@@ -466,7 +585,8 @@ class StructureAwareEngine:
         # Per-block true edge counts: a MUTABLE copy (streaming updates it);
         # feeds the exact metric accounting and the bytes cost model.
         self.edge_counts = np.array(p.unified.edges, dtype=np.int64)
-        self._ed = edge_data(p.unified, self.aux)
+        self._ed = edge_data(p.unified, self.aux, self.config.subblocks,
+                             p.block_size)
         self._block_affects = self._build_block_affects()
         self._coupling = self._build_coupling_matrix()
         self._coupling_dev = jnp.asarray(self._coupling)
@@ -516,13 +636,26 @@ class StructureAwareEngine:
     def _build_coupling_matrix(self) -> np.ndarray:
         """Dense (P, P) staleness-coupling matrix (decay folded in): the
         device-side bump is the max-product matvec
-        ``bump_b = max_j dmax_j * K[j, b]``. The underlying block->block
-        edge-count matrix is kept as ``self.coupling_counts`` — the truth
-        the streaming subsystem maintains incrementally."""
+        ``bump_b = max_j dmax_j * K[j, b]``. With sub-blocks the counts
+        (and hence K) grow a destination-sub axis — (P, P, S) — so the
+        bump lands per sub-range: ``bump_{b,s} = max_j dmax_j * K[j, b,
+        s]``. The underlying edge-count matrix is kept as
+        ``self.coupling_counts`` — the truth the streaming subsystem
+        maintains incrementally."""
         p = self.plan
-        w = np.zeros((p.num_blocks, p.num_blocks), dtype=np.int64)
-        for j, (tgt, counts) in enumerate(self._block_affects):
-            w[j, tgt] = counts
+        s = self.config.subblocks
+        if s == 1:
+            w = np.zeros((p.num_blocks, p.num_blocks), dtype=np.int64)
+            for j, (tgt, counts) in enumerate(self._block_affects):
+                w[j, tgt] = counts
+        else:
+            g, c, ks = p.graph, p.block_size, p.sub_size
+            w = np.zeros((p.num_blocks, p.num_blocks, s), dtype=np.int64)
+            for j in range(p.num_blocks):
+                lo, hi = p.block_range(j)
+                dsts = g.out_dst[g.out_indptr[lo]:g.out_indptr[hi]]
+                d = dsts[dsts // c < p.num_blocks]  # drop the dead tail
+                np.add.at(w[j], (d // c, (d % c) // ks), 1)
         self.coupling_counts = w
         return coupling_from_counts(w, self.program, p.block_size)
 
@@ -535,10 +668,27 @@ class StructureAwareEngine:
             advances the block-local convergence counters: a superstep
             spent under the pruning floor increments ``calm``; any PSD at
             or over the floor (own activity OR an incoming bump) resets it
-            — the retire/re-arm hysteresis of the adaptive active set."""
+            — the retire/re-arm hysteresis of the adaptive active set.
+
+            Polymorphic over the sub-block axis: with (P, S) state the
+            outgoing signal stays block-granular (the block's max
+            sub-delta — deltas anywhere in the source block can reach any
+            of its out-edges) but the incoming bump is SUB-resolved
+            through the (P, P, S) coupling: only the target sub-ranges
+            that receive edges from the moving block re-arm. Calm then
+            advances per sub-block. 1-D state traces to the exact flat
+            path (the retire/re-arm unit test drives it directly)."""
             d = jnp.where(dmax > eps, dmax, 0.0)
-            bump = jnp.max(d[:, None] * coupling, axis=0)
-            psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
+            if psd.ndim == 2:
+                dblk = d.max(axis=1)
+                if coupling.ndim == 3:  # (P, P, S): sub-resolved bump
+                    bump = jnp.max(dblk[:, None, None] * coupling, axis=0)
+                else:  # S = 1 keeps the flat (P, P) coupling: exact old path
+                    bump = jnp.max(dblk[:, None] * coupling, axis=0)[:, None]
+                psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
+            else:
+                bump = jnp.max(d[:, None] * coupling, axis=0)
+                psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
             calm = jnp.where(psd < floor, calm + 1, 0).astype(jnp.int32)
             return psd, jnp.zeros_like(dmax), calm
         return post
@@ -557,9 +707,22 @@ class StructureAwareEngine:
         return dispatch_width(self.config, self._ladder, active, psd_host)
 
     def _active_count(self, calm_host: np.ndarray) -> int:
+        """Blocks still in the active set: a block is live while ANY of its
+        sub-blocks is (calm is (P, S); 1-D input keeps the flat meaning)."""
         if not self.config.adaptive:
             return self.plan.num_blocks
-        return int((calm_host < self.config.retire_after).sum())
+        live = np.asarray(calm_host) < self.config.retire_after
+        if live.ndim == 2:
+            live = live.any(axis=-1)
+        return int(live.sum())
+
+    def _subblocks_retired(self, calm_host: np.ndarray) -> int:
+        """Sub-blocks retired at end of run (0 on the dense path, where
+        calm never gates anything — mirrors blocks_retired)."""
+        if not self.config.adaptive:
+            return 0
+        return int((np.asarray(calm_host) >=
+                    self.config.retire_after).sum())
 
     def _acct_table(self) -> np.ndarray:
         return acct_table(self.plan, self.edge_counts)
@@ -590,13 +753,20 @@ class StructureAwareEngine:
         wholesale). Shapes must match the compiled epoch — a geometry
         change needs a new engine, not new arrays."""
         ed = self._ed
+        new_dstl = (jnp.asarray(dst_local, jnp.int32)
+                    if dst_local is not None else ed.dstl)
+        new_valid = (jnp.asarray(valid, bool) if valid is not None
+                     else ed.valid)
+        cov = ed.cov
+        if dst_local is not None or valid is not None:
+            cov = jnp.asarray(tile_coverage(
+                np.asarray(new_dstl), np.asarray(new_valid),
+                self.config.subblocks, self.plan.block_size))
         new = EdgeData(
             src=jnp.asarray(src, jnp.int32) if src is not None else ed.src,
-            dstl=(jnp.asarray(dst_local, jnp.int32)
-                  if dst_local is not None else ed.dstl),
+            dstl=new_dstl,
             w=jnp.asarray(w, jnp.float32) if w is not None else ed.w,
-            valid=(jnp.asarray(valid, bool) if valid is not None
-                   else ed.valid),
+            valid=new_valid, cov=cov,
             aux=jnp.asarray(aux, jnp.float32) if aux is not None else ed.aux)
         for name in EdgeData._fields:
             if getattr(new, name).shape != getattr(ed, name).shape:
@@ -667,14 +837,18 @@ class StructureAwareEngine:
         if rows.size == 0:
             return 0
         ed = self._ed
-        (ns, nd, nw, nv), pk = self._chunked_scatter(
-            "row_scatter", (ed.src, ed.dstl, ed.w, ed.valid), rows,
+        cov = tile_coverage(dst_local, valid, self.config.subblocks,
+                            self.plan.block_size)
+        (ns, nd, nw, nv, nc), pk = self._chunked_scatter(
+            "row_scatter", (ed.src, ed.dstl, ed.w, ed.valid, ed.cov), rows,
             [np.asarray(src, np.int32), np.asarray(dst_local, np.int32),
-             np.asarray(w, np.float32), np.asarray(valid, bool)],
+             np.asarray(w, np.float32), np.asarray(valid, bool), cov],
             self._ROW_CHUNK)
-        self._ed = EdgeData(src=ns, dstl=nd, w=nw, valid=nv, aux=ed.aux)
-        # 4B src + 4B dst offset + 4B w + 1B valid per slot + 4B row index
-        return pk * (int(ns.shape[1]) * 13 + 4)
+        self._ed = EdgeData(src=ns, dstl=nd, w=nw, valid=nv, cov=nc,
+                            aux=ed.aux)
+        # 4B src + 4B dst offset + 4B w + 1B valid per slot + 1B per
+        # sub-block coverage bit + 4B row index
+        return pk * (int(ns.shape[1]) * 13 + int(nc.shape[1]) + 4)
 
     def update_aux(self, idx: np.ndarray, vals: np.ndarray) -> int:
         """Scatter changed per-vertex aux entries into the device-resident
@@ -705,7 +879,7 @@ class StructureAwareEngine:
             "coupling_scatter", (self._coupling_dev,), rows, [row_vals],
             self._COUPLING_CHUNK)
         self._coupling_dev = new_c
-        return pk * (int(self._coupling.shape[1]) * 4 + 4)
+        return pk * (int(self._coupling[0].size) * 4 + 4)
 
     @property
     def values_nbytes(self) -> int:
@@ -735,7 +909,8 @@ class StructureAwareEngine:
             plan, cfg = self.plan, self.config
             self._proc = make_tiled_processor(
                 self.program, plan.unified, plan.block_size,
-                plan.n_live, plan.graph.n, cfg.use_pallas)
+                plan.n_live, plan.graph.n, cfg.use_pallas,
+                subblocks=cfg.subblocks)
         return self._proc
 
     def _sweeps(self, width: int | None = None):
@@ -750,26 +925,44 @@ class StructureAwareEngine:
         depths = jnp.asarray(self._inner_depths(width))
         process_one, process_iterated, gids = self._processor()
         write_one = self._write_one(plan.block_size)
+        subblocks = cfg.subblocks
+        floor = self._psd_floor()
 
+        # Sub-block activity masks are derived from the block's OWN psd row
+        # at slot entry. Within a superstep the scheduled rows are distinct
+        # and each sweep slot writes only its own row, so this equals the
+        # pre-superstep psd — the invariant the sb-dispatch accounting in
+        # _get_chunk / _run_host relies on. At S = 1 every scheduled block
+        # clears the floor (selection pruned it otherwise), so the mask
+        # would be all-true; sub_act=None keeps the flat trace instead.
         def hot_sweep(ed, values, psd, dmax, rows, ok):
             def body(i, carry):
                 values, psd, dmax = carry
                 row = rows[i]
+                sub_act = None if subblocks == 1 else psd[row] >= floor
                 base, new, psd_val, dmax_val = process_iterated(
-                    ed, values, row, depths[i])
+                    ed, values, row, depths[i], sub_act)
                 return write_one(values, psd, dmax, base, new, psd_val,
-                                 dmax_val, gids[row], ok[i])
+                                 dmax_val, gids[row], ok[i], sub_act)
             return lax.fori_loop(0, width, body, (values, psd, dmax))
 
         def cold_sweep(ed, values, psd, dmax, rows, ok):
-            bases, news, psd_vals, dmax_vals = jax.vmap(
-                lambda r: process_one(ed, values, r))(rows)
+            if subblocks == 1:
+                bases, news, psd_vals, dmax_vals = jax.vmap(
+                    lambda r: process_one(ed, values, r))(rows)
+                sub_acts = None
+            else:
+                sub_acts = psd[rows] >= floor  # (W, S)
+                bases, news, psd_vals, dmax_vals = jax.vmap(
+                    lambda r, sa: process_one(ed, values, r, sa))(
+                        rows, sub_acts)
 
             def body(i, carry):
                 values, psd, dmax = carry
                 return write_one(values, psd, dmax, bases[i], news[i],
                                  psd_vals[i], dmax_vals[i],
-                                 gids[rows[i]], ok[i])
+                                 gids[rows[i]], ok[i],
+                                 None if sub_acts is None else sub_acts[i])
             return lax.fori_loop(0, width, body, (values, psd, dmax))
 
         return hot_sweep, cold_sweep
@@ -777,10 +970,16 @@ class StructureAwareEngine:
     @staticmethod
     def _write_one(c):
         def write_one(values, psd, dmax, base, new, psd_val, dmax_val, gid,
-                      ok):
+                      ok, sub_act=None):
             cur = lax.dynamic_slice(values, (base,), (c,))
             values = lax.dynamic_update_slice(
                 values, jnp.where(ok, new, cur), (base,))
+            if sub_act is not None:
+                # masked sub-blocks were not swept: their psd/calm rows
+                # must keep decaying toward retirement, not be overwritten
+                # with the masked sweep's zero delta
+                psd_val = jnp.where(sub_act, psd_val, psd[gid])
+                dmax_val = jnp.where(sub_act, dmax_val, dmax[gid])
             psd = jnp.where(ok, psd.at[gid].set(psd_val), psd)
             dmax = jnp.where(ok, dmax.at[gid].set(dmax_val), dmax)
             return values, psd, dmax
@@ -850,10 +1049,19 @@ class StructureAwareEngine:
             min_psd=self._psd_floor(),
             pad_id=int(np.argmin(tile_cnt)) if tile_cnt.size else 0)
 
+        floor = self._psd_floor()
+
         def superstep(it, i2, ed, coupling, values, psd, dmax, calm, counts,
-                      hslots, is_hot):
+                      hslots, sbacc, is_hot):
             hot_rows, hot_ok, cold_rows, cold_ok = select(it, i2, psd,
                                                           is_hot)
+            # sub-dispatch accounting from the PRE-sweep psd — identical to
+            # the sub_act masks the sweeps derive (rows are distinct within
+            # a superstep; see _sweeps). At S = 1 every ok block counts 1,
+            # so sbacc == block loads and the mean dispatch is exactly 1.0.
+            live = (psd >= floor).sum(axis=-1).astype(jnp.int32)
+            sbacc = sbacc + jnp.where(hot_ok, live[hot_rows], 0).sum() \
+                + jnp.where(cold_ok, live[cold_rows], 0).sum()
             values, psd, dmax = hot_sweep(ed, values, psd, dmax, hot_rows,
                                           hot_ok)
             values, psd, dmax = cold_sweep(ed, values, psd, dmax, cold_rows,
@@ -864,34 +1072,38 @@ class StructureAwareEngine:
             # staleness propagation + calm/retire counter advance
             psd, dmax, calm = post(coupling, psd, dmax, calm)
             scheduled = hot_ok.any() | cold_ok.any()
-            return values, psd, dmax, calm, counts, hslots, scheduled
+            return values, psd, dmax, calm, counts, hslots, sbacc, scheduled
 
         def chunk(ed, coupling, values, psd, dmax, calm, counts, hslots,
-                  it0, it_end, is_hot, i2):
+                  sbacc, it0, it_end, is_hot, i2):
             def cond(carry):
-                it, _, _, _, _, _, _, done = carry
+                it, _, _, _, _, _, _, _, done = carry
                 return (it < it_end) & jnp.logical_not(done)
 
             def body(carry):
-                it, values, psd, dmax, calm, counts, hslots, _ = carry
-                values, psd, dmax, calm, counts, hslots, scheduled = \
-                    superstep(it, i2, ed, coupling, values, psd, dmax,
-                              calm, counts, hslots, is_hot)
+                it, values, psd, dmax, calm, counts, hslots, sbacc, _ = \
+                    carry
+                (values, psd, dmax, calm, counts, hslots, sbacc,
+                 scheduled) = superstep(it, i2, ed, coupling, values, psd,
+                                        dmax, calm, counts, hslots, sbacc,
+                                        is_hot)
                 conv = state_lib.converged_device(psd, t2)
                 # empty schedule: no iteration happened (host parity: the
                 # reference loop breaks before processing)
                 it = it + jnp.where(scheduled, 1, 0).astype(it.dtype)
                 done = conv | jnp.logical_not(scheduled)
-                return it, values, psd, dmax, calm, counts, hslots, done
+                return (it, values, psd, dmax, calm, counts, hslots, sbacc,
+                        done)
 
-            it, values, psd, dmax, calm, counts, hslots, _ = lax.while_loop(
+            (it, values, psd, dmax, calm, counts, hslots, sbacc,
+             _) = lax.while_loop(
                 cond, body,
-                (it0, values, psd, dmax, calm, counts, hslots,
+                (it0, values, psd, dmax, calm, counts, hslots, sbacc,
                  jnp.bool_(False)))
-            return (it, values, psd, dmax, calm, counts, hslots,
+            return (it, values, psd, dmax, calm, counts, hslots, sbacc,
                     state_lib.converged_device(psd, t2))
 
-        fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5, 6, 7))
+        fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5, 6, 7, 8))
         self._fns[key] = fn
         return fn
 
@@ -901,15 +1113,17 @@ class StructureAwareEngine:
         so a long-lived caller (streaming, benchmarks) never pays a bucket
         compile inside a measured batch/run. Returns the widths warmed."""
         p = self.plan
+        ps = (p.num_blocks, self.config.subblocks)
         for wb in self._ladder:
             fn = self._get_chunk(wb)
             fn(self._ed, self._coupling_dev,
                jnp.zeros(self._values_len, jnp.float32),
-               jnp.zeros(p.num_blocks, jnp.float32),
-               jnp.zeros(p.num_blocks, jnp.float32),
-               jnp.zeros(p.num_blocks, jnp.int32),
+               jnp.zeros(ps, jnp.float32),
+               jnp.zeros(ps, jnp.float32),
+               jnp.zeros(ps, jnp.int32),
                jnp.zeros(p.num_blocks, jnp.int32),
                jnp.zeros(wb, jnp.int32), jnp.int32(0), jnp.int32(0),
+               jnp.int32(0),
                jnp.zeros(p.num_blocks, dtype=bool),
                jnp.int32(self.config.i2))
         return list(self._ladder)
@@ -928,13 +1142,24 @@ class StructureAwareEngine:
             return self._run_fused(max_iterations, warm)
         return self._run_host(max_iterations, warm)
 
+    def _sub2d(self, a: np.ndarray) -> np.ndarray:
+        """Normalize a per-block (P,) state vector to the engine's (P, S)
+        layout by replicating across sub-blocks (identity content at
+        S = 1; for S > 1 a block-granular seed arms/retires all of the
+        block's sub-ranges — the sound reading of a flat input)."""
+        a = np.asarray(a)
+        if a.ndim == 2:
+            return a
+        return np.repeat(a[:, None], self.config.subblocks, axis=1)
+
     def _start_state(self, warm: WarmStart | None):
         """(values, psd, rep, calm, i2): the start state of a run. Cold
         runs start fully active (calm 0 everywhere, configured cadence);
         warm runs may seed retired calm counters and a delta-scaled
-        cadence (ignored when adaptive is off)."""
+        cadence (ignored when adaptive is off). psd/calm are (P, S)
+        device state; flat (P,) warm seeds are replicated per sub-block."""
         cfg, p = self.config, self.plan
-        calm0 = np.zeros(p.num_blocks, dtype=np.int32)
+        calm0 = np.zeros((p.num_blocks, cfg.subblocks), dtype=np.int32)
         if warm is None:
             mode = ("barrier" if self.program.monotone_cooling
                     else "universal")
@@ -943,7 +1168,8 @@ class StructureAwareEngine:
                 interval=cfg.repartition_interval,
                 growth=cfg.repartition_growth)
             return (jnp.asarray(self.values0),
-                    jnp.asarray(state_lib.init_psd(p.num_blocks)), rep,
+                    jnp.asarray(state_lib.init_psd(p.num_blocks,
+                                                   cfg.subblocks)), rep,
                     calm0, cfg.i2)
         if warm.values.shape[0] != self._values_len:
             raise ValueError("warm values must be permuted + padded "
@@ -952,11 +1178,12 @@ class StructureAwareEngine:
             warm.is_hot, interval=cfg.repartition_interval,
             growth=cfg.repartition_growth)
         if cfg.adaptive and warm.calm is not None:
-            calm0 = np.asarray(warm.calm, dtype=np.int32)
+            calm0 = self._sub2d(warm.calm).astype(np.int32)
         i2 = (warm.i2 if cfg.adaptive and warm.i2 is not None
               else cfg.i2)
+        psd0 = self._sub2d(np.asarray(warm.psd, dtype=np.float32))
         return (jnp.asarray(np.asarray(warm.values, dtype=np.float32)),
-                jnp.asarray(np.asarray(warm.psd, dtype=np.float32)), rep,
+                jnp.asarray(psd0.astype(np.float32)), rep,
                 calm0, int(i2))
 
     def _run_fused(self, max_iterations: int | None = None,
@@ -966,14 +1193,17 @@ class StructureAwareEngine:
 
         values, psd, rep, calm_host, i2 = self._start_state(warm)
         calm = jnp.asarray(calm_host)
-        psd_host = np.asarray(psd)
+        # host-side decisions (repartition, dispatch bucket, history) are
+        # block-granular: fold the (P, S) sub-block psd to block priority
+        psd_host = state_lib.fold_subblock_psd(np.asarray(psd))
         active = self._active_count(calm_host)
-        dmax = jnp.zeros(p.num_blocks, jnp.float32)
+        dmax = jnp.zeros((p.num_blocks, cfg.subblocks), jnp.float32)
         acct = self._acct_table()
         metrics = Metrics()
         history = []
         depth_hist: dict[int, int] = {}
         width_iters = 0
+        sb_total = 0
 
         with Timer() as t:
             it = 0
@@ -984,20 +1214,21 @@ class StructureAwareEngine:
                 # the device counts schedules per block (exact chunk-sized
                 # int32s, zeroed each chunk); the host expands them through
                 # the int64 accounting table at the boundary
-                (it_dev, values, psd, dmax, calm, counts, hslots,
+                (it_dev, values, psd, dmax, calm, counts, hslots, sbacc,
                  conv) = chunk(
                     self._ed, self._coupling_dev, values, psd, dmax, calm,
                     jnp.zeros(p.num_blocks, jnp.int32),
-                    jnp.zeros(wb, jnp.int32),
+                    jnp.zeros(wb, jnp.int32), jnp.int32(0),
                     jnp.int32(it), jnp.int32(it_end),
                     jnp.asarray(rep.is_hot), jnp.int32(i2))
                 # the chunk's single host sync point
                 it_new = int(it_dev)
-                psd_host = np.asarray(psd)
+                psd_host = state_lib.fold_subblock_psd(np.asarray(psd))
                 calm_host = np.asarray(calm)
                 counts_host = np.asarray(counts, dtype=np.int64)
                 delta = counts_host @ acct
                 metrics.absorb_counters(delta)
+                sb_total += int(sbacc)
                 span = it_new - it
                 width_iters += wb * span
                 for d, cnt in zip(self._inner_depths(wb).tolist(),
@@ -1032,6 +1263,9 @@ class StructureAwareEngine:
         metrics.mean_dispatch_width = width_iters / max(it, 1)
         metrics.blocks_retired = p.num_blocks - self._active_count(calm_host)
         metrics.inner_depth_hist = depth_hist
+        metrics.subblocks_retired = self._subblocks_retired(calm_host)
+        metrics.mean_subblock_dispatch = sb_total / \
+            max(metrics.block_loads, 1)
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 
@@ -1041,32 +1275,41 @@ class StructureAwareEngine:
         max_it = max_iterations or cfg.max_iterations
 
         values, psd, rep, calm_host, i2 = self._start_state(warm)
-        psd_host = np.asarray(psd)
+        # psd_sub is the raw (P, S) sub-block state (sb-dispatch accounting
+        # + the scheduler folds it internally); psd_host its block fold for
+        # the host-side block-granular decisions
+        psd_sub = np.asarray(psd)
+        psd_host = state_lib.fold_subblock_psd(psd_sub)
         sched = Scheduler(width=self._pick_width(
                               self._active_count(calm_host), psd_host),
                           i2=i2, cold_frac=cfg.cold_frac,
                           min_psd=self._psd_floor())
         calm = jnp.asarray(calm_host)
-        dmax = jnp.zeros(p.num_blocks, jnp.float32)
+        dmax = jnp.zeros((p.num_blocks, cfg.subblocks), jnp.float32)
+        floor = self._psd_floor()
         metrics = Metrics()
         history = []
         depth_hist: dict[int, int] = {}
         hslots = np.zeros(cfg.width, dtype=np.int64)
         width_iters = 0
+        sb_total = 0
 
         with Timer() as t:
             it = 0
             while it < max_it:
-                sel: Selection = sched.select(it, psd_host, rep.is_hot)
+                sel: Selection = sched.select(it, psd_sub, rep.is_hot)
                 if sel.hot_ids.size == 0 and sel.cold_ids.size == 0:
                     break
+                processed = np.concatenate([sel.hot_ids, sel.cold_ids])
+                # live sub-blocks actually swept this iteration, from the
+                # same pre-sweep psd the device masks derive from
+                sb_total += int((psd_sub[processed] >= floor).sum())
                 values, psd, dmax = self._dispatch(
                     values, psd, dmax, sel.hot_ids, sequential=True,
                     width=sched.width)
                 values, psd, dmax = self._dispatch(
                     values, psd, dmax, sel.cold_ids, sequential=False,
                     width=sched.width)
-                processed = np.concatenate([sel.hot_ids, sel.cold_ids])
                 self._account(metrics, processed)
                 hslots[:sel.hot_ids.size] += 1
                 width_iters += sched.width
@@ -1076,7 +1319,8 @@ class StructureAwareEngine:
                 # also advances the calm/retire counters.
                 psd, dmax, calm = self._post(self._coupling_dev, psd, dmax,
                                              calm)
-                psd_host = np.asarray(psd)
+                psd_sub = np.asarray(psd)
+                psd_host = state_lib.fold_subblock_psd(psd_sub)
                 fired = rep.maybe_repartition(it, psd_host, cfg.hot_ratio)
                 if fired and cfg.adaptive:
                     # boundary retarget: same cadence as the fused path's
@@ -1094,7 +1338,7 @@ class StructureAwareEngine:
                     "width": sched.width,
                 })
                 it += 1
-                if state_lib.converged(psd_host, cfg.t2):
+                if state_lib.converged(psd_sub, cfg.t2):
                     metrics.converged = True
                     break
         calm_host = np.asarray(calm)
@@ -1107,6 +1351,9 @@ class StructureAwareEngine:
         metrics.mean_dispatch_width = width_iters / max(it, 1)
         metrics.blocks_retired = p.num_blocks - self._active_count(calm_host)
         metrics.inner_depth_hist = depth_hist
+        metrics.subblocks_retired = self._subblocks_retired(calm_host)
+        metrics.mean_subblock_dispatch = sb_total / \
+            max(metrics.block_loads, 1)
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 

@@ -42,6 +42,11 @@ class Metrics:
     mean_dispatch_width: float = 0.0  # iteration-weighted dispatch bucket
     inner_depth_hist: dict = dataclasses.field(default_factory=dict)
     # hot-slot executions per Gauss-Seidel depth {t_inner: count}
+    # hierarchical-partition audit trail (block-level fields above are
+    # untouched for cross-PR comparability; both are 0/1.0-trivial when
+    # subblocks == 1)
+    subblocks_retired: int = 0  # sub-blocks retired at end (calm >= limit)
+    mean_subblock_dispatch: float = 0.0  # live sub-blocks per block load
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -92,10 +97,30 @@ class StreamMetrics:
     blocks_retired: int = 0  # cumulative end-of-batch retired blocks
     width_iterations: float = 0.0  # sum of dispatch width over iterations
     inner_depth_hist: dict = dataclasses.field(default_factory=dict)
+    # hierarchical-partition accounting (same in-place-batch convention as
+    # dirty_blocks/blocks_seen; all 0 or degenerate when subblocks == 1)
+    dirty_subblocks: int = 0  # cumulative armed sub-blocks (in-place batches)
+    subblocks_seen: int = 0  # cumulative P*S over in-place batches
+    subblocks_retired: int = 0  # cumulative end-of-batch retired sub-blocks
+    subblock_loads: int = 0  # live sub-blocks actually swept across runs
+    subblock_load_slots: int = 0  # block loads across warm runs (denominator)
 
     @property
     def dirty_frac(self) -> float:
         return self.dirty_blocks / max(self.blocks_seen, 1)
+
+    @property
+    def subblock_dirty_frac(self) -> float:
+        """Armed sub-blocks over sub-block slots (in-place batches): the
+        granularity win over ``dirty_frac`` — a small delta arms few
+        sub-blocks even when it pigeonholes into most blocks."""
+        return self.dirty_subblocks / max(self.subblocks_seen, 1)
+
+    @property
+    def mean_subblock_dispatch(self) -> float:
+        """Live sub-blocks swept per block load (1.0 when subblocks == 1):
+        how much of each loaded block's vertex range actually computed."""
+        return self.subblock_loads / max(self.subblock_load_slots, 1)
 
     @property
     def mean_dispatch_width(self) -> float:
@@ -118,6 +143,8 @@ class StreamMetrics:
         d["upload_frac"] = self.upload_frac
         d["latency_per_batch_s"] = self.latency_per_batch_s
         d["mean_dispatch_width"] = self.mean_dispatch_width
+        d["subblock_dirty_frac"] = self.subblock_dirty_frac
+        d["mean_subblock_dispatch"] = self.mean_subblock_dispatch
         return d
 
 
@@ -141,6 +168,7 @@ class ServeMetrics:
     iterations: int = 0  # supersteps across lane batches
     epochs_pinned: int = 0  # distinct epochs queries pinned
     stale_answers: int = 0  # results served from a pre-ingest epoch
+    blocks_retired: int = 0  # end-of-batch retired blocks across lane runs
 
     @property
     def lane_utilization(self) -> float:

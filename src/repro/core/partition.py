@@ -152,6 +152,17 @@ class PartitionPlan:
     ad: np.ndarray  # AD in permuted order (diagnostics)
     t1: float  # AD threshold used
     alpha: float
+    # Hierarchical partitions: every block is split into `subblocks`
+    # contiguous vertex ranges of sub_size = block_size / subblocks each.
+    # Sub-blocks are an ACTIVITY-TRACKING granularity (per-sub-block PSD,
+    # calm counters, sweep masks), not a storage granularity — the tiled
+    # layout is unchanged, and subblocks = 1 is the flat (PR-5) plan.
+    subblocks: int = 1
+
+    @property
+    def sub_size(self) -> int:
+        """Vertices per sub-block (block_size / subblocks, exact)."""
+        return self.block_size // self.subblocks
 
     # Group-padded storages are only consumed by the shard_map distributed
     # engine (and its tests); built lazily so the common single-device path
@@ -222,14 +233,22 @@ def _build_storage(g: Graph, block_ids: np.ndarray, block_size: int,
 def build_plan(g: Graph, *, block_size: int = 256, alpha: float | None = None,
                sample_frac: float = 0.1, hot_ratio: float = 0.1,
                seed: int = 0, tile_slack: float = 0.0, spare_tiles: int = 0,
-               keep_dead: bool = False) -> PartitionPlan:
+               keep_dead: bool = False, subblocks: int = 1) -> PartitionPlan:
     """Alg. 1: rank by AD, split hot/cold/dead, chunk into blocks.
 
     ``keep_dead`` routes zero-AD vertices into the live blocks (they sort to
     the tail anyway) instead of the unscheduled dead partition — required by
     the streaming subsystem, where an isolated vertex can gain edges later
     and must already own a block slot + spare tile capacity.
+
+    ``subblocks`` splits every block into that many equal contiguous
+    sub-ranges for sub-block activity tracking (see PartitionPlan); it must
+    divide ``block_size`` so every sub-block is the same size.
     """
+    if subblocks < 1 or block_size % subblocks:
+        raise ValueError(
+            f"subblocks ({subblocks}) must be >= 1 and divide "
+            f"block_size ({block_size})")
     if alpha is None:
         alpha = degrees.suggest_alpha(g)
     ad = degrees.active_degree(g, alpha)
@@ -261,4 +280,4 @@ def build_plan(g: Graph, *, block_size: int = 256, alpha: float | None = None,
     return PartitionPlan(graph=pg, inv=inv, order=order, block_size=block_size,
                          num_blocks=num_blocks, n_live=n_live, n_dead=n_dead,
                          barrier_block=barrier, unified=unified, ad=ad_perm,
-                         t1=t1, alpha=alpha)
+                         t1=t1, alpha=alpha, subblocks=subblocks)

@@ -21,6 +21,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import state
+
 
 @dataclasses.dataclass(frozen=True)
 class Selection:
@@ -44,6 +46,10 @@ class Scheduler:
     def select(self, iteration: int, psd: np.ndarray,
                is_hot: np.ndarray) -> Selection:
         w = self.width
+        # Hierarchical partitions: a (P, S) per-sub-block PSD folds to its
+        # block priority (max over sub-blocks) — scheduling decisions stay
+        # block-granular; the sub-block masks live inside the sweeps.
+        psd = state.fold_subblock_psd(psd)
         live = psd >= self.min_psd  # safe: if ALL pruned, sum(psd) < T2
         hot_ids = np.flatnonzero(is_hot & live)
         cold_ids = np.flatnonzero(~is_hot & live)
@@ -93,6 +99,9 @@ def make_device_select(width: int, cold_frac: float,
     slots = jnp.arange(width)
 
     def select(iteration, i2, psd, is_hot):
+        # Block priority = max over sub-blocks when psd carries a (P, S)
+        # sub-block axis (identity at S = 1; see Scheduler.select).
+        psd = state.fold_subblock_psd_device(psd)
         live = psd >= min_psd
         hot_live = is_hot & live
         cold_live = jnp.logical_not(is_hot) & live

@@ -10,6 +10,16 @@ DESIGN.md §7).
 Unprocessed blocks carry PSD = UNSEEN (a large sentinel), which (a) gives
 every block first-visit priority and (b) blocks convergence until the whole
 graph has been processed at least once.
+
+Hierarchical partitions (sub-blocks): with ``EngineConfig.subblocks = S``
+every block is split into S contiguous vertex ranges and the PSD / calm
+state grows a trailing sub-block axis — psd (P, S), calm (P, S), lane psd
+(P, S, L). Scheduling stays block-granular: the block priority is the MAX
+over its sub-blocks (:func:`fold_subblock_psd`), which preserves the Eq. 1
+semantics (a block is as hot as its hottest sub-range), and convergence is
+SUM over blocks of that max — identical to the paper's test at S = 1 and a
+sound (conservative) over-estimate of SUM(PSD) for S > 1. Every helper in
+this module is dimension-polymorphic: 1-D inputs behave exactly as before.
 """
 from __future__ import annotations
 
@@ -18,8 +28,28 @@ import numpy as np
 UNSEEN = np.float32(1e30)
 
 
-def init_psd(num_blocks: int) -> np.ndarray:
-    return np.full(num_blocks, UNSEEN, dtype=np.float32)
+def init_psd(num_blocks: int, subblocks: int | None = None) -> np.ndarray:
+    """(P,) cold-start PSD vector, or (P, S) when ``subblocks`` is given
+    (hierarchical engines keep per-sub-block PSDs; see module docstring)."""
+    if subblocks is None:
+        return np.full(num_blocks, UNSEEN, dtype=np.float32)
+    return np.full((num_blocks, subblocks), UNSEEN, dtype=np.float32)
+
+
+def fold_subblock_psd(psd: np.ndarray) -> np.ndarray:
+    """(P,) block scheduling priority from a (P, S) per-sub-block PSD: the
+    max over sub-blocks — a block is as hot as its hottest sub-range, so
+    Eq. 1's priority ordering is preserved at block granularity. 1-D input
+    passes through (the S = 1 engine stores (P, 1); folding a singleton
+    axis is bitwise identity)."""
+    psd = np.asarray(psd)
+    return psd.max(axis=-1) if psd.ndim == 2 else psd
+
+
+def fold_subblock_psd_device(psd):
+    """Traced twin of :func:`fold_subblock_psd` for the fused superstep."""
+    import jax.numpy as jnp
+    return jnp.max(psd, axis=-1) if psd.ndim == 2 else psd
 
 
 def warm_psd(num_blocks: int, dirty: np.ndarray,
@@ -61,56 +91,115 @@ def warm_calm(num_blocks: int, armed: np.ndarray,
     return calm
 
 
-def init_lane_psd(num_blocks: int, lane_active: np.ndarray) -> np.ndarray:
-    """(P, L) per-lane PSD start state for a multi-lane query run: active
-    lanes carry the UNSEEN sentinel in every block (first-visit coverage is
-    per lane, served by the shared sweep), padding lanes start at 0 —
-    individually converged from the first superstep, so they never hold a
-    block in the active set nor block lane convergence."""
+def warm_psd_sub(num_blocks: int, subblocks: int, dirty_sub: np.ndarray,
+                 bump: np.ndarray | None = None) -> np.ndarray:
+    """(P, S) warm-restart PSD: the sub-block refinement of
+    :func:`warm_psd`. ``dirty_sub`` is the (P, S) bool mask of perturbed
+    sub-blocks (UNSEEN re-heat); ``bump`` is the aux staleness bound —
+    (P, S) when the caller resolved which sub-ranges the changed
+    messages land in (the streaming aux path does), or (P,) applied to
+    every sub-block of a bumped block (the conservative fallback). At
+    S = 1 this is ``warm_psd`` with a trailing singleton axis, value for
+    value."""
+    psd = np.zeros((num_blocks, subblocks), dtype=np.float32)
+    if bump is not None:
+        b = np.asarray(bump, dtype=np.float32)
+        psd = np.maximum(psd, b if b.ndim == 2 else b[:, None])
+    psd[np.asarray(dirty_sub, dtype=bool)] = UNSEEN
+    return psd
+
+
+def warm_calm_sub(num_blocks: int, subblocks: int, armed_sub: np.ndarray,
+                  retire_after: int) -> np.ndarray:
+    """(P, S) warm-restart calm counters: armed sub-blocks start fresh,
+    clean ones start individually retired (see :func:`warm_calm`) — a
+    10-edit batch opens with ~10 live sub-blocks instead of ~10 live
+    whole blocks."""
+    calm = np.full((num_blocks, subblocks), retire_after, dtype=np.int32)
+    calm[np.asarray(armed_sub, dtype=bool)] = 0
+    return calm
+
+
+def init_lane_psd(num_blocks: int, lane_active: np.ndarray,
+                  subblocks: int | None = None) -> np.ndarray:
+    """(P, L) per-lane PSD start state for a multi-lane query run — or
+    (P, S, L) when ``subblocks`` is given: active lanes carry the UNSEEN
+    sentinel in every (sub-)block (first-visit coverage is per lane,
+    served by the shared sweep), padding lanes start at 0 — individually
+    converged from the first superstep, so they never hold a block in the
+    active set nor block lane convergence."""
     lane_active = np.asarray(lane_active, dtype=bool)
-    psd = np.zeros((num_blocks, lane_active.shape[0]), dtype=np.float32)
-    psd[:, lane_active] = UNSEEN
+    shape = ((num_blocks, lane_active.shape[0]) if subblocks is None
+             else (num_blocks, subblocks, lane_active.shape[0]))
+    psd = np.zeros(shape, dtype=np.float32)
+    psd[..., lane_active] = UNSEEN
     return psd
 
 
 def fold_lane_psd(psd: np.ndarray, lane_done: np.ndarray) -> np.ndarray:
-    """(P,) block scheduling priority from (P, L) per-lane PSDs: the max
-    over lanes still running — the union of the lane frontiers, so a block
-    hot in ANY live lane is schedulable and a retired lane stops pricing
-    blocks. Numpy host version (repartition boundaries); the fused lane
-    superstep applies the identical fold in jnp."""
-    masked = np.where(np.asarray(lane_done, dtype=bool)[None, :], 0.0,
-                      np.asarray(psd, dtype=np.float32))
-    return masked.max(axis=1) if masked.shape[1] else \
-        np.zeros(masked.shape[0], np.float32)
+    """(P,) block scheduling priority from (P, L) per-lane PSDs — or
+    (P, S, L) per-sub-block-per-lane PSDs: the max over lanes still
+    running (and over sub-blocks) — the union of the lane frontiers, so a
+    block hot in ANY live lane is schedulable and a retired lane stops
+    pricing blocks. Numpy host version (repartition boundaries); the
+    fused lane superstep applies the identical fold in jnp."""
+    psd = np.asarray(psd, dtype=np.float32)
+    lane_done = np.asarray(lane_done, dtype=bool)
+    mask = lane_done[None, :] if psd.ndim == 2 else lane_done[None, None, :]
+    masked = np.where(mask, 0.0, psd)
+    if masked.shape[-1] == 0:
+        return np.zeros(masked.shape[0], np.float32)
+    out = masked.max(axis=-1)  # over lanes
+    return out.max(axis=-1) if out.ndim == 2 else out  # over sub-blocks
 
 
 def fold_lane_psd_device(psd, lane_done):
     """Traced twin of :func:`fold_lane_psd` for the fused lane superstep."""
     import jax.numpy as jnp
-    return jnp.max(jnp.where(lane_done[None, :], jnp.float32(0.0), psd),
-                   axis=1)
+    mask = lane_done[None, :] if psd.ndim == 2 else lane_done[None, None, :]
+    out = jnp.max(jnp.where(mask, jnp.float32(0.0), psd), axis=-1)
+    return jnp.max(out, axis=-1) if out.ndim == 2 else out
+
+
+def lane_sub_psd_device(psd, lane_done):
+    """(P, S) lane-folded per-sub-block priority from a (P, S, L) lane
+    PSD: the max over lanes still running. This is the ONE sub-block mask
+    the lane sweeps apply — shared across lanes, so with a single admitted
+    lane the masking decisions reduce exactly to the single-program
+    engine's (serve parity); 2-D input passes through with a singleton
+    sub-block axis's semantics (S = 1)."""
+    import jax.numpy as jnp
+    if psd.ndim == 2:
+        return jnp.where(lane_done[None, :], jnp.float32(0.0), psd)
+    return jnp.max(jnp.where(lane_done[None, None, :], jnp.float32(0.0),
+                             psd), axis=-1)
 
 
 def lane_converged_device(psd, t2: float):
-    """(L,) per-lane SUM(PSD) < T2 — the paper's convergence test applied
-    per lane column (same f32-sum argument as :func:`converged_device`)."""
+    """(L,) per-lane SUM < T2 — the paper's convergence test applied per
+    lane column (same f32-sum argument as :func:`converged_device`); with
+    a sub-block axis the summand is each block's max over sub-blocks (the
+    block priority), conservative for S > 1 and identical at S = 1."""
     import jax.numpy as jnp
-    return jnp.sum(psd, axis=0) < jnp.float32(t2)
+    blk = jnp.max(psd, axis=1) if psd.ndim == 3 else psd
+    return jnp.sum(blk, axis=0) < jnp.float32(t2)
 
 
 def converged(psd: np.ndarray, t2: float) -> bool:
-    """Paper §4: the entire graph converges when sum of PSDs < T2."""
-    return bool(np.asarray(psd, dtype=np.float64).sum() < t2)
+    """Paper §4: the entire graph converges when sum of PSDs < T2. With a
+    sub-block axis the per-block summand is the max over sub-blocks."""
+    folded = fold_subblock_psd(np.asarray(psd, dtype=np.float64))
+    return bool(folded.sum() < t2)
 
 
 def converged_device(psd, t2: float):
     """Traced SUM(PSD) < T2 for the fused superstep. f32 sum: UNSEEN
     sentinels keep the sum far above any realistic T2 (overflow to +inf is
     also a correct 'not converged'), and near the threshold every PSD is
-    tiny so the f32 accumulation error is negligible against T2."""
+    tiny so the f32 accumulation error is negligible against T2. With a
+    sub-block axis the summand is each block's max over sub-blocks."""
     import jax.numpy as jnp
-    return jnp.sum(psd) < jnp.float32(t2)
+    return jnp.sum(fold_subblock_psd_device(psd)) < jnp.float32(t2)
 
 
 def psd_threshold(psd: np.ndarray, hot_ratio: float = 0.1) -> float:

@@ -19,7 +19,15 @@ the lane frontiers:
     module-level decision helpers, not reimplemented — with a single
     admitted lane the schedule decisions are identical to the
     single-program engine, which is what makes serving a strict superset
-    of the engine rather than a fork (property tested).
+    of the engine rather than a fork (property tested);
+  * hierarchical partitions (``EngineConfig.subblocks = S > 1``) carry
+    through: lane PSD/dmax are (P, S, L), calm is (P, S), and each
+    scheduled block applies ONE shared (S,) sub-block mask — the
+    lane-folded sub priority over the pruning floor
+    (:func:`repro.core.state.lane_sub_psd_device`) — so a narrow query
+    frontier sweeps only the sub-ranges some live lane actually prices,
+    instead of paying whole-block sweeps. ``subblocks = 1`` traces the
+    exact flat path.
 
 Why lanes beat sequential runs: each scheduled block's edge tiles are
 gathered once per superstep and the message/combine/apply math vectorizes
@@ -74,44 +82,74 @@ class LaneEngine:
         self.program = program
         p = engine.plan
         self._proc = make_lane_processor(program, p.unified, p.block_size,
-                                         p.n_live, p.graph.n)
+                                         p.n_live, p.graph.n,
+                                         subblocks=engine.config.subblocks)
         self._fns: dict = {}
 
     # -- traced pieces (mirrors of the engine's, with a lane axis) -----------
     def _sweeps(self, width: int):
         eng = self.engine
         c = eng.plan.block_size
+        subblocks = eng.config.subblocks
+        floor = jnp.float32(eng._psd_floor())
         depths = jnp.asarray(inner_depths(eng.config, width))
         process_one, process_iterated, gids = self._proc
 
         def write_one(values, psd, dmax, base, new, psd_vec, dmax_vec, gid,
-                      ok):
+                      ok, sub_act=None):
             nl = values.shape[1]
             cur = lax.dynamic_slice(values, (base, 0), (c, nl))
             values = lax.dynamic_update_slice(
                 values, jnp.where(ok, new, cur), (base, 0))
+            if sub_act is not None:
+                # masked sub-blocks keep their prior per-lane PSD/dmax —
+                # they were not swept, so their staleness is unchanged
+                psd_vec = jnp.where(sub_act[:, None], psd_vec, psd[gid])
+                dmax_vec = jnp.where(sub_act[:, None], dmax_vec, dmax[gid])
             psd = jnp.where(ok, psd.at[gid].set(psd_vec), psd)
             dmax = jnp.where(ok, dmax.at[gid].set(dmax_vec), dmax)
             return values, psd, dmax
 
-        def hot_sweep(ed, vconst, values, psd, dmax, rows, ok):
+        def row_sub_act(psd, lane_done, gid):
+            """(S,) shared sub-block mask for one scheduled row: the
+            lane-folded sub priority over the floor. Rows scheduled in a
+            superstep are distinct and each sweep writes only its own
+            row, so reading ``psd[gid]`` mid-sweep equals the
+            pre-superstep fold the sb accounting uses."""
+            live = jnp.max(jnp.where(lane_done, jnp.float32(0.0),
+                                     psd[gid]), axis=-1)
+            return live >= floor
+
+        def hot_sweep(ed, vconst, values, psd, dmax, rows, ok, lane_done):
             def body(i, carry):
                 values, psd, dmax = carry
                 row = rows[i]
+                sub_act = (None if subblocks == 1
+                           else row_sub_act(psd, lane_done, gids[row]))
                 base, new, pv, dv = process_iterated(ed, values, vconst,
-                                                     row, depths[i])
+                                                     row, depths[i],
+                                                     sub_act)
                 return write_one(values, psd, dmax, base, new, pv, dv,
-                                 gids[row], ok[i])
+                                 gids[row], ok[i], sub_act)
             return lax.fori_loop(0, width, body, (values, psd, dmax))
 
-        def cold_sweep(ed, vconst, values, psd, dmax, rows, ok):
-            bases, news, pvs, dvs = jax.vmap(
-                lambda r: process_one(ed, values, vconst, r))(rows)
+        def cold_sweep(ed, vconst, values, psd, dmax, rows, ok, lane_done):
+            if subblocks == 1:
+                bases, news, pvs, dvs = jax.vmap(
+                    lambda r: process_one(ed, values, vconst, r))(rows)
+                sub_acts = [None] * width
+            else:
+                sub_acts = jax.vmap(
+                    lambda r: row_sub_act(psd, lane_done, gids[r]))(rows)
+                bases, news, pvs, dvs = jax.vmap(
+                    lambda r, sa: process_one(ed, values, vconst, r, sa))(
+                        rows, sub_acts)
 
             def body(i, carry):
                 values, psd, dmax = carry
+                sa = None if subblocks == 1 else sub_acts[i]
                 return write_one(values, psd, dmax, bases[i], news[i],
-                                 pvs[i], dvs[i], gids[rows[i]], ok[i])
+                                 pvs[i], dvs[i], gids[rows[i]], ok[i], sa)
             return lax.fori_loop(0, width, body, (values, psd, dmax))
 
         return hot_sweep, cold_sweep
@@ -125,15 +163,26 @@ class LaneEngine:
             """Per-lane staleness propagation + the SHARED calm counters:
             the bump is applied lane-by-lane (a delta in lane l re-arms
             downstream blocks for lane l only), while retirement hysteresis
-            tracks the folded block priority — a block retires only when
-            quiet in every live lane, which keeps the active set sound for
-            the whole batch."""
-            d = jnp.where(dmax > eps, dmax, 0.0)  # (P, L)
-            bump = jnp.max(d[:, None, :] * coupling[:, :, None], axis=0)
-            psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
-            block_psd = state_lib.fold_lane_psd_device(psd, lane_done)
-            calm = jnp.where(block_psd < floor, calm + 1, 0) \
-                .astype(jnp.int32)
+            tracks the folded (lane-union) priority — a block retires only
+            when quiet in every live lane, which keeps the active set sound
+            for the whole batch. With a sub-block axis ((P, S, L) state)
+            the coupling is destination-sub-resolved ((P, P, S), same as
+            the engine's post): the outgoing signal is the block's max
+            sub-delta per lane and an incoming bump re-arms only the
+            sub-ranges that block actually feeds, per lane; calm then
+            advances per sub-block on the lane-folded sub priority."""
+            d = jnp.where(dmax > eps, dmax, 0.0)  # (P, L) or (P, S, L)
+            if psd.ndim == 3:
+                dblk = d.max(axis=1)  # (P, L)
+                bump = jnp.max(dblk[:, None, None, :]
+                               * coupling[:, :, :, None], axis=0)  # (P,S,L)
+                psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
+                quiet = state_lib.lane_sub_psd_device(psd, lane_done)
+            else:
+                bump = jnp.max(d[:, None, :] * coupling[:, :, None], axis=0)
+                psd = jnp.maximum(psd, jnp.minimum(bump, 1e29))
+                quiet = state_lib.fold_lane_psd_device(psd, lane_done)
+            calm = jnp.where(quiet < floor, calm + 1, 0).astype(jnp.int32)
             return psd, jnp.zeros_like(dmax), calm
         return post
 
@@ -151,23 +200,39 @@ class LaneEngine:
             width=width, cold_frac=cfg.cold_frac, min_psd=eng._psd_floor(),
             pad_id=int(np.argmin(tile_cnt)) if tile_cnt.size else 0)
 
+        floor = jnp.float32(eng._psd_floor())
+
         def chunk(ed, coupling, vconst, values, psd, dmax, calm, counts,
-                  hslots, lane_done, lane_it, it0, it_end, is_hot, i2):
+                  hslots, sbacc, lane_done, lane_it, it0, it_end, is_hot,
+                  i2):
             def cond(carry):
                 it = carry[0]
                 done = carry[-1]
                 return (it < it_end) & jnp.logical_not(done)
 
             def body(carry):
-                (it, values, psd, dmax, calm, counts, hslots, lane_done,
-                 lane_it, _) = carry
+                (it, values, psd, dmax, calm, counts, hslots, sbacc,
+                 lane_done, lane_it, _) = carry
                 block_psd = state_lib.fold_lane_psd_device(psd, lane_done)
                 hot_rows, hot_ok, cold_rows, cold_ok = select(
                     it, i2, block_psd, is_hot)
+                # sub-block dispatch accounting from the PRE-superstep
+                # priorities — identical to the masks the sweeps apply
+                # (scheduled rows are distinct within a superstep)
+                if psd.ndim == 3:
+                    live = (state_lib.lane_sub_psd_device(psd, lane_done)
+                            >= floor).sum(axis=-1).astype(jnp.int32)
+                else:
+                    live = (block_psd >= floor).astype(jnp.int32)
+                sbacc = sbacc + \
+                    jnp.where(hot_ok, live[hot_rows], 0).sum() + \
+                    jnp.where(cold_ok, live[cold_rows], 0).sum()
                 values, psd, dmax = hot_sweep(ed, vconst, values, psd,
-                                              dmax, hot_rows, hot_ok)
+                                              dmax, hot_rows, hot_ok,
+                                              lane_done)
                 values, psd, dmax = cold_sweep(ed, vconst, values, psd,
-                                               dmax, cold_rows, cold_ok)
+                                               dmax, cold_rows, cold_ok,
+                                               lane_done)
                 counts = counts.at[hot_rows].add(hot_ok.astype(jnp.int32))
                 counts = counts.at[cold_rows].add(cold_ok.astype(jnp.int32))
                 hslots = hslots + hot_ok.astype(jnp.int32)
@@ -179,18 +244,18 @@ class LaneEngine:
                 lane_it = jnp.where(newly, it, lane_it)
                 lane_done = lane_done | lane_conv
                 done = lane_done.all() | jnp.logical_not(scheduled)
-                return (it, values, psd, dmax, calm, counts, hslots,
+                return (it, values, psd, dmax, calm, counts, hslots, sbacc,
                         lane_done, lane_it, done)
 
-            (it, values, psd, dmax, calm, counts, hslots, lane_done,
+            (it, values, psd, dmax, calm, counts, hslots, sbacc, lane_done,
              lane_it, _) = lax.while_loop(
                 cond, body,
-                (it0, values, psd, dmax, calm, counts, hslots, lane_done,
-                 lane_it, jnp.bool_(False)))
-            return (it, values, psd, dmax, calm, counts, hslots, lane_done,
-                    lane_it, lane_done.all())
+                (it0, values, psd, dmax, calm, counts, hslots, sbacc,
+                 lane_done, lane_it, jnp.bool_(False)))
+            return (it, values, psd, dmax, calm, counts, hslots, sbacc,
+                    lane_done, lane_it, lane_done.all())
 
-        fn = jax.jit(chunk, donate_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+        fn = jax.jit(chunk, donate_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
         self._fns[key] = fn
         return fn
 
@@ -227,17 +292,21 @@ class LaneEngine:
         eng = self.engine
         p = eng.plan
         vl = eng._values_len
+        sb = eng.config.subblocks
+        lane_shape = ((p.num_blocks, n_lanes) if sb == 1
+                      else (p.num_blocks, sb, n_lanes))
+        calm_shape = (p.num_blocks,) if sb == 1 else (p.num_blocks, sb)
         for wb in eng._ladder:
             fn = self._get_chunk(wb)
-            fn(eng.edge_state, jnp.zeros((p.num_blocks, p.num_blocks),
-                                         jnp.float32),
+            fn(eng.edge_state, jnp.zeros(eng._coupling.shape, jnp.float32),
                jnp.zeros((vl, n_lanes), jnp.float32),
                jnp.zeros((vl, n_lanes), jnp.float32),
-               jnp.zeros((p.num_blocks, n_lanes), jnp.float32),
-               jnp.zeros((p.num_blocks, n_lanes), jnp.float32),
-               jnp.zeros(p.num_blocks, jnp.int32),
+               jnp.zeros(lane_shape, jnp.float32),
+               jnp.zeros(lane_shape, jnp.float32),
+               jnp.zeros(calm_shape, jnp.int32),
                jnp.zeros(p.num_blocks, jnp.int32),
                jnp.zeros(wb, jnp.int32),
+               jnp.int32(0),
                jnp.zeros(n_lanes, dtype=bool),
                jnp.zeros(n_lanes, jnp.int32),
                jnp.int32(0), jnp.int32(0),
@@ -271,7 +340,9 @@ class LaneEngine:
         values = jnp.asarray(self._pad_lane_values(vals))
         vconst_dev = jnp.asarray(self._pad_lane_values(vc))
 
-        psd_host = state_lib.init_lane_psd(p.num_blocks, lane_active)
+        sb = cfg.subblocks
+        psd_host = state_lib.init_lane_psd(p.num_blocks, lane_active,
+                                           None if sb == 1 else sb)
         psd = jnp.asarray(psd_host)
         lane_done_host = ~lane_active
         lane_done = jnp.asarray(lane_done_host)
@@ -282,9 +353,11 @@ class LaneEngine:
             p.num_blocks, p.barrier_block, mode,
             interval=cfg.repartition_interval,
             growth=cfg.repartition_growth)
-        calm_host = np.zeros(p.num_blocks, dtype=np.int32)
+        calm_host = np.zeros(p.num_blocks if sb == 1 else (p.num_blocks, sb),
+                             dtype=np.int32)
         calm = jnp.asarray(calm_host)
-        dmax = jnp.zeros((p.num_blocks, nl), jnp.float32)
+        dmax = jnp.zeros((p.num_blocks, nl) if sb == 1
+                         else (p.num_blocks, sb, nl), jnp.float32)
         active = eng._active_count(calm_host)
         # loads/bytes are billed once per block schedule (shared by the
         # lanes — that is the batching win); updates/edges per admitted
@@ -296,6 +369,8 @@ class LaneEngine:
         metrics = Metrics()
         depth_hist: dict[int, int] = {}
         width_iters = 0
+        sb_total = 0
+        loads_total = 0
         conv = jnp.bool_(False)
 
         with Timer() as t:
@@ -304,11 +379,12 @@ class LaneEngine:
                 wb = dispatch_width(cfg, eng._ladder, active, folded)
                 chunk = self._get_chunk(wb)
                 it_end = rep.chunk_end(max_it)
-                (it_dev, values, psd, dmax, calm, counts, hslots,
+                (it_dev, values, psd, dmax, calm, counts, hslots, sbacc,
                  lane_done, lane_it, conv) = chunk(
                     ed, coupling_dev, vconst_dev, values, psd, dmax, calm,
                     jnp.zeros(p.num_blocks, jnp.int32),
                     jnp.zeros(wb, jnp.int32),
+                    jnp.int32(0),
                     lane_done, lane_it,
                     jnp.int32(it), jnp.int32(it_end),
                     jnp.asarray(rep.is_hot), jnp.int32(cfg.i2))
@@ -316,9 +392,15 @@ class LaneEngine:
                 psd_host = np.asarray(psd)
                 lane_done_host = np.asarray(lane_done)
                 calm_host = np.asarray(calm)
+                # ONE active-set read per chunk boundary: both the next
+                # dispatch-width pick and the end-of-run retirement metric
+                # reuse it (this used to be recomputed at every use site)
+                active = eng._active_count(calm_host)
                 folded = state_lib.fold_lane_psd(psd_host, lane_done_host)
                 counts_host = np.asarray(counts, dtype=np.int64)
                 metrics.absorb_counters(counts_host @ acct)
+                sb_total += int(sbacc)
+                loads_total += int(counts_host.sum())
                 span = it_new - it
                 width_iters += wb * span
                 for d, cnt in zip(inner_depths(cfg, wb).tolist(),
@@ -334,11 +416,12 @@ class LaneEngine:
                     break
                 it = it_new
                 rep.maybe_repartition(it - 1, folded, cfg.hot_ratio)
-                active = eng._active_count(calm_host)
         metrics.iterations = it
         metrics.wall_time_s = t.elapsed
         metrics.mean_dispatch_width = width_iters / max(it, 1)
-        metrics.blocks_retired = p.num_blocks - eng._active_count(calm_host)
+        metrics.blocks_retired = p.num_blocks - active
+        metrics.subblocks_retired = eng._subblocks_retired(calm_host)
+        metrics.mean_subblock_dispatch = sb_total / max(loads_total, 1)
         metrics.inner_depth_hist = depth_hist
         lane_it_host = np.asarray(lane_it, dtype=np.int64)
         lane_conv_host = np.asarray(lane_done) & lane_active

@@ -234,6 +234,7 @@ class QueryService:
         m.run_time_s += t.elapsed
         m.wait_time_s += sum(r.wait_s for r in out)
         m.iterations += res.metrics.iterations
+        m.blocks_retired += res.metrics.blocks_retired
         m.stale_answers += k if es.epoch < self.streaming.epoch else 0
         return out
 

@@ -215,26 +215,35 @@ class EdgeStore:
         return (np.concatenate(srcs), np.concatenate(dsts),
                 np.concatenate(ws))
 
-    def out_block_mass(self, vertices: np.ndarray,
-                       mass: np.ndarray) -> np.ndarray:
+    def out_block_mass(self, vertices: np.ndarray, mass: np.ndarray,
+                       subblocks: int = 1) -> np.ndarray:
         """(num_blocks,) per-destination-block sum of ``mass[i]`` over the
         live internal out-edges of ``vertices[i]`` — the data behind the
         aux staleness bump: when a source's aux changes, the bound on the
-        message-delta mass entering each downstream block. Scans only the
-        src-buckets of the vertices' own blocks, not the whole edge set."""
-        out = np.zeros(self.num_blocks, dtype=np.float64)
+        message-delta mass entering each downstream block. With
+        ``subblocks`` the sum is resolved per destination sub-range —
+        (num_blocks, S) — at the same bucket-scan cost (the destination
+        id is already in hand). Scans only the src-buckets of the
+        vertices' own blocks, not the whole edge set."""
+        shape = (self.num_blocks if subblocks == 1
+                 else (self.num_blocks, subblocks))
+        out = np.zeros(shape, dtype=np.float64)
         vertices = np.asarray(vertices, dtype=np.int64)
         if vertices.size == 0 or self.m == 0:
             return out
         order = np.argsort(vertices, kind="stable")
         sv, sm = vertices[order], np.asarray(mass, np.float64)[order]
         c = self.block_size
+        ksub = c // max(subblocks, 1)
 
         def add(ids: np.ndarray, key: np.ndarray, tgt: np.ndarray) -> None:
             pos = np.minimum(np.searchsorted(sv, key[ids]), sv.size - 1)
             hit = sv[pos] == key[ids]
             if hit.any():
-                np.add.at(out, tgt[ids[hit]] // c, sm[pos[hit]])
+                t = tgt[ids[hit]]
+                at = (t // c if subblocks == 1
+                      else (t // c, (t % c) // ksub))
+                np.add.at(out, at, sm[pos[hit]])
 
         for b in np.unique(vertices // c):
             add(self._bucket_live(self.by_src, int(b)), self.psrc,

@@ -31,7 +31,14 @@ cold-admission cadence scaled to the perturbed fraction
 (`schedule.adaptive_i2`), and clean blocks re-enter only when the
 staleness coupling lifts them over the pruning floor. Reconvergence
 effort therefore scales with the batch, not the graph (BLADYG's
-argument for delta-local recomputation).
+argument for delta-local recomputation). With hierarchical partitions
+(`EngineConfig.subblocks > 1`) the arming is SUB-block granular: the
+warm PSD/calm seeds mark only the sub-ranges holding the batch's touched
+destination vertices, so a 10-edit batch whose endpoints pigeonhole into
+10 different blocks still starts with ~10 armed sub-blocks — the engine
+sweeps only those sub-ranges of each loaded block
+(`StreamBatchReport.subblock_dirty_frac` / `mean_subblock_dispatch`
+audit exactly this).
 
 Non-monotone deletions: min/max programs can never take back a value, so
 before the warm re-start the program's ``reset_on_delete`` hook
@@ -93,10 +100,25 @@ class StreamBatchReport:
     blocks_retired: int = 0  # blocks retired at reconvergence end
     mean_dispatch_width: float = 0.0  # iteration-weighted bucket width
     inner_depth_hist: dict = dataclasses.field(default_factory=dict)
+    # hierarchical-partition stats (degenerate at subblocks == 1: every
+    # dirty block is one dirty sub-block and the mean dispatch is 1.0)
+    subblocks: int = 1  # sub-blocks per block this epoch
+    dirty_subblocks: int = 0  # armed sub-blocks (UNSEEN re-heats)
+    block_loads: int = 0  # engine block loads of the reconvergence
+    subblocks_retired: int = 0  # sub-blocks retired at reconvergence end
+    mean_subblock_dispatch: float = 0.0  # live sub-blocks per block load
 
     @property
     def dirty_frac(self) -> float:
         return self.dirty_blocks / max(self.num_blocks, 1)
+
+    @property
+    def subblock_dirty_frac(self) -> float:
+        """Armed sub-blocks over sub-block slots — the granularity the
+        P-pigeonhole can't see: a small batch arms few sub-blocks even
+        when its endpoints land in most blocks."""
+        return self.dirty_subblocks / max(self.num_blocks *
+                                          self.subblocks, 1)
 
     @property
     def upload_frac(self) -> float:
@@ -292,6 +314,7 @@ class StreamingEngine:
         bytes_up = 0
         empty = np.empty(0, dtype=np.int64)
         reset_blocks = empty
+        reset_verts = empty  # permuted ids, for sub-block-granular arming
 
         with Timer() as t_ing:
             # 1. mutate the base truth (deletes first, then inserts)
@@ -392,8 +415,8 @@ class StreamingEngine:
                 if mask is not None and mask.any():
                     self._values = self._values.copy()
                     self._values[mask] = self._init_values[mask]
-                    reset_blocks = self._blocks_of(
-                        inv[np.flatnonzero(mask)])
+                    reset_verts = inv[np.flatnonzero(mask)]
+                    reset_blocks = self._blocks_of(reset_verts)
                     n_reset = int(mask.sum())
 
             # 4. aux refresh from the incremental degrees — batched to the
@@ -405,9 +428,11 @@ class StreamingEngine:
             # below the pruning floor) instead of an UNSEEN re-heat of
             # nearly every block.
             aux_dirty = empty
-            aux_bump = None
+            aux_dirty_sub = None  # (blk, sub) index pair at S > 1
+            aux_bump = None  # (P,) flat / (P, S) sub-resolved
             aux_changed = empty
             aux_vals = np.empty(0, dtype=np.float32)
+            subblocks = eng.config.subblocks
             if prog.aux_fn is not None and not overflow and (
                     killed.size or ins_ids.size):
                 cand = np.unique(np.concatenate(
@@ -422,14 +447,26 @@ class StreamingEngine:
                         dmsg = np.asarray(prog.aux_delta(
                             self._values[plan.order[aux_changed]],
                             self._aux[aux_changed], aux_vals))
-                        mass = self.store.out_block_mass(aux_changed, dmsg)
+                        mass = self.store.out_block_mass(
+                            aux_changed, dmsg, subblocks)
                         # sound per-block bound: damping * (message-delta
                         # mass entering the block) / C, the same form the
-                        # staleness coupling uses
+                        # staleness coupling uses; at S > 1 the mass is
+                        # resolved per destination sub-range, so only the
+                        # sub-blocks actually fed by the changed sources
+                        # re-arm (block-granular bumps would re-open the
+                        # pigeonhole: ~every bump arms S sub-blocks)
                         aux_bump = (prog.damping * mass / c).astype(
                             np.float32)
                     else:
-                        aux_dirty = self.store.out_blocks_of(aux_changed)
+                        # min/max programs: UNSEEN re-heat of the changed
+                        # sources' out-neighbourhood, resolved to the
+                        # destination sub-ranges when S > 1
+                        _, sdst, _ = self.store.successors(aux_changed)
+                        aux_dirty = np.unique(sdst // c)
+                        if subblocks > 1:
+                            ks_ = c // subblocks
+                            aux_dirty_sub = (sdst // c, (sdst % c) // ks_)
                     self._aux[aux_changed] = aux_vals
 
             # 5. commit to the engine — inside the ingest timer, so both
@@ -437,6 +474,7 @@ class StreamingEngine:
             # device upload are billed to the batch's latency
             calm0 = None
             i2_warm = None
+            subblocks = eng.config.subblocks
             if overflow:
                 # a block outgrew its slack capacity: new epoch
                 # (re-permute by current activity, re-provision slack,
@@ -450,9 +488,11 @@ class StreamingEngine:
                 eng = self.engine
                 plan = eng.plan
                 dirty = np.ones(plan.num_blocks, dtype=bool)
+                dirty_sub = np.ones((plan.num_blocks, subblocks),
+                                    dtype=bool)
                 is_hot = np.zeros(plan.num_blocks, dtype=bool)
                 is_hot[:plan.barrier_block] = True
-                psd0 = state_lib.init_psd(plan.num_blocks)
+                psd0 = state_lib.init_psd(plan.num_blocks, subblocks)
                 # the warm-values upload is billed where it happens (below)
                 bytes_up = eng.full_upload_bytes() - eng.values_nbytes
             else:
@@ -473,26 +513,65 @@ class StreamingEngine:
                 for ids in (kill_set, rebuild_set, append_set, aux_dirty,
                             reset_blocks):
                     dirty[ids.astype(np.int64)] = True
+                # sub-block refinement of the dirty set: arm only the
+                # sub-ranges holding this batch's touched DESTINATION
+                # vertices (mirror dsts too on symmetric engines) and the
+                # delete-reset frontier — the dst vertex is where an edge
+                # mutation changes an aggregate. Aux-dirty re-heats are
+                # likewise resolved to the destination sub-ranges the
+                # changed sources actually feed (whole rows at S = 1).
+                # Block-level `dirty` stays the truth for reports/is_hot/
+                # i2 — at S = 1 the two views coincide column for column.
+                ksub = c // subblocks
+                dirty_sub = np.zeros((plan.num_blocks, subblocks),
+                                     dtype=bool)
+                tv_parts = [kpd, ip_dst, reset_verts]
+                if sym:
+                    tv_parts += [kps, ip_src]
+                tv = np.concatenate([np.asarray(v, dtype=np.int64)
+                                     for v in tv_parts])
+                if tv.size:
+                    dirty_sub[tv // c, (tv % c) // ksub] = True
+                if aux_dirty_sub is not None:
+                    dirty_sub[aux_dirty_sub] = True
+                else:
+                    dirty_sub[aux_dirty.astype(np.int64)] = True
+                # safety net: a dirty block must own >= 1 armed sub-block
+                # (rebuild bookkeeping paths all arm through tv/aux, but
+                # the invariant is load-bearing for convergence)
+                dirty_sub |= (dirty & ~dirty_sub.any(axis=1))[:, None]
+                dirty_sub &= dirty[:, None]
                 is_hot = dirty.copy()
-                if aux_bump is not None:
+                # block-level view of the (possibly sub-resolved) aux bump:
+                # a block is bumped iff any of its sub-blocks is
+                bump_blk = (None if aux_bump is None else
+                            aux_bump.max(axis=-1) if aux_bump.ndim == 2
+                            else aux_bump)
+                if bump_blk is not None:
                     # bumped blocks are scheduled with hot priority (their
                     # pending delta is known and front-loading it converges
                     # in fewer sweeps) but stay out of the dirty set: they
                     # carry a finite prunable PSD, not the UNSEEN re-heat
-                    is_hot |= aux_bump > 0
-                psd0 = state_lib.warm_psd(plan.num_blocks, dirty, aux_bump)
+                    is_hot |= bump_blk > 0
+                psd0 = state_lib.warm_psd_sub(plan.num_blocks, subblocks,
+                                              dirty_sub, aux_bump)
                 if eng.config.adaptive:
                     # delta-proportional warm restart: only the perturbed
-                    # blocks (dirty re-heats + aux bumps) start active, so
-                    # the reconvergence opens in a dispatch bucket sized to
-                    # the batch, with a cold-admission cadence scaled to
+                    # sub-blocks (dirty re-heats + aux bumps) start active,
+                    # so the reconvergence opens in a dispatch bucket sized
+                    # to the batch, with a cold-admission cadence scaled to
                     # the perturbed fraction — effort follows the delta,
-                    # not the graph
+                    # not the graph. A 10-edit batch arms ~10 sub-blocks
+                    # even when its endpoints pigeonhole into 10 blocks.
                     armed = dirty.copy()
+                    armed_sub = dirty_sub.copy()
                     if aux_bump is not None:
-                        armed |= aux_bump > 0
-                    calm0 = state_lib.warm_calm(
-                        plan.num_blocks, armed, eng.config.retire_after)
+                        armed |= bump_blk > 0
+                        armed_sub |= (aux_bump > 0 if aux_bump.ndim == 2
+                                      else (aux_bump > 0)[:, None])
+                    calm0 = state_lib.warm_calm_sub(
+                        plan.num_blocks, subblocks, armed_sub,
+                        eng.config.retire_after)
                     i2_warm = adaptive_i2(eng.config.i2, plan.num_blocks,
                                           int(armed.sum()))
 
@@ -519,7 +598,7 @@ class StreamingEngine:
                 self._values = res.values
         self.epoch += 1  # the mutated graph is the next epoch
 
-        n_bumped = (int(((aux_bump > 0) & ~dirty).sum())
+        n_bumped = (int(((bump_blk > 0) & ~dirty).sum())
                     if aux_bump is not None else 0)
         report = StreamBatchReport(
             inserts=batch.n_inserts, deletes=int(killed.size),
@@ -538,7 +617,13 @@ class StreamingEngine:
             mean_dispatch_width=(res.metrics.mean_dispatch_width
                                  if res else 0.0),
             inner_depth_hist=dict(res.metrics.inner_depth_hist)
-            if res else {})
+            if res else {},
+            subblocks=subblocks,
+            dirty_subblocks=int(dirty_sub.sum()),
+            block_loads=res.metrics.block_loads if res else 0,
+            subblocks_retired=res.metrics.subblocks_retired if res else 0,
+            mean_subblock_dispatch=(res.metrics.mean_subblock_dispatch
+                                    if res else 0.0))
         self._absorb(report)
         return report
 
@@ -558,18 +643,28 @@ class StreamingEngine:
 
     def _bump(self, ids: np.ndarray, sign: int) -> None:
         """Degree + block-coupling counts for internal copies (with mirrors
-        for symmetric engines) — incremental, no edge rescans."""
+        for symmetric engines) — incremental, no edge rescans. At S > 1
+        the coupling counts carry a destination-sub axis (P, P, S); the
+        sub index is (dst % C) // sub_size, free from the ids in hand."""
         if ids.size == 0:
             return
-        c = self.engine.plan.block_size
+        plan = self.engine.plan
+        c = plan.block_size
+        ks = plan.sub_size
         ps, pd = self.store.psrc[ids], self.store.pdst[ids]
         np.add.at(self.out_deg, ps, sign)
         np.add.at(self.in_deg, pd, sign)
-        np.add.at(self.W, (ps // c, pd // c), sign)
+        if self.W.ndim == 2:
+            np.add.at(self.W, (ps // c, pd // c), sign)
+        else:
+            np.add.at(self.W, (ps // c, pd // c, (pd % c) // ks), sign)
         if self.program.needs_symmetric:
             np.add.at(self.out_deg, pd, sign)
             np.add.at(self.in_deg, ps, sign)
-            np.add.at(self.W, (pd // c, ps // c), sign)
+            if self.W.ndim == 2:
+                np.add.at(self.W, (pd // c, ps // c), sign)
+            else:
+                np.add.at(self.W, (pd // c, ps // c, (ps % c) // ks), sign)
 
     def _internal_graph(self) -> Graph:
         g = self.current_graph()
@@ -600,6 +695,8 @@ class StreamingEngine:
             # plan_rebuilds instead of skewing the average
             m.dirty_blocks += r.dirty_blocks
             m.blocks_seen += r.num_blocks
+            m.dirty_subblocks += r.dirty_subblocks
+            m.subblocks_seen += r.num_blocks * r.subblocks
         m.appended_blocks += r.appended_blocks
         m.killed_blocks += r.killed_blocks
         m.rebuilt_blocks += r.rebuilt_blocks
@@ -609,5 +706,12 @@ class StreamingEngine:
         m.bytes_full += r.bytes_full
         m.blocks_retired += r.blocks_retired
         m.width_iterations += r.mean_dispatch_width * r.iterations
+        m.subblocks_retired += r.subblocks_retired
+        # mean_subblock_dispatch is block-load-weighted: recover the exact
+        # live-sub-block count from the per-run mean (the division by
+        # block_loads round-trips within an ulp; round() restores the int)
+        m.subblock_loads += int(round(r.mean_subblock_dispatch *
+                                      r.block_loads))
+        m.subblock_load_slots += r.block_loads
         for d, cnt in r.inner_depth_hist.items():
             m.inner_depth_hist[d] = m.inner_depth_hist.get(d, 0) + cnt

@@ -1,0 +1,171 @@
+"""Hierarchical partitions (sub-blocks): the second partition level that
+breaks the P-pigeonhole. Acceptance properties — (1) the sub-block
+engine, the flat (subblocks=1) engine, and the host reference loop all
+land on the same fixpoint for every program class, with fused/host
+DECISION parity at S > 1 (same loads, updates, iterations); (2) warm
+streaming restarts (inserts AND deletes) stay correct under sub-block
+re-heat and arm materially fewer sub-blocks than the block-granular
+tracker's pigeonhole bound; (3) the streaming prewarm covers the
+sub-block shapes — ingest after prewarm compiles nothing new."""
+import dataclasses
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core import state as state_lib
+from repro.core.engine import EngineConfig, StructureAwareEngine
+from repro.serve import Query, QueryService
+from repro.stream import (DeltaBatch, StreamConfig, StreamingEngine,
+                          synthetic_stream)
+
+CFG = EngineConfig(t2=1e-9, width=4, block_size=128)
+
+
+def _close(a, b, **kw):
+    return np.allclose(np.minimum(a, 1e18), np.minimum(b, 1e18), **kw)
+
+
+# -- fixpoint + decision parity ----------------------------------------------
+@given(n=st.integers(150, 700), seed=st.integers(0, 12),
+       algo=st.sampled_from(["pagerank", "sssp", "cc"]),
+       subblocks=st.sampled_from([2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_subblock_fixpoint_property(n, seed, algo, subblocks):
+    """Property (hierarchical tentpole): per-sub-block tracking changes
+    which vertex ranges a block load sweeps, never the fixpoint — the
+    S > 1 fused engine, the S > 1 host reference loop, and the flat
+    S = 1 engine all converge to the same values; fused and host make
+    the same schedule decisions (loads/updates/iterations) at S > 1
+    exactly as the adaptive parity suite guarantees at S = 1."""
+    g = G.powerlaw_graph(n, avg_deg=4, seed=seed, weighted=True)
+    prog = {"pagerank": A.pagerank, "cc": A.cc,
+            "sssp": lambda: A.sssp(0)}[algo]
+    cfg = dataclasses.replace(CFG, subblocks=subblocks)
+    rs_f = StructureAwareEngine(g, prog(), cfg).run(fused=True)
+    rs_h = StructureAwareEngine(g, prog(), cfg).run(fused=False)
+    r1 = StructureAwareEngine(
+        g, prog(), dataclasses.replace(CFG, subblocks=1)).run(fused=True)
+    assert rs_f.metrics.converged and rs_h.metrics.converged \
+        and r1.metrics.converged
+    # fused/host sub-block decision parity (mirrors the adaptive suite)
+    assert _close(rs_f.values, rs_h.values, rtol=1e-5, atol=1e-6)
+    assert abs(rs_f.metrics.iterations - rs_h.metrics.iterations) <= 1
+    assert rs_f.metrics.updates == rs_h.metrics.updates
+    assert rs_f.metrics.block_loads == rs_h.metrics.block_loads
+    assert rs_f.metrics.bytes_loaded == rs_h.metrics.bytes_loaded
+    # sub-block masking never changes the answer
+    assert _close(rs_f.values, r1.values, rtol=1e-4, atol=1e-5)
+
+
+def test_subblock_one_is_flat_state():
+    """The S = 1 state helpers are the flat helpers with a trailing
+    singleton axis, value for value — the invariant behind the bitwise
+    S = 1 reproduction of the flat engine."""
+    dirty = np.array([True, False, True, False])
+    bump = np.array([0.0, 0.5, 0.0, 2.0], np.float32)
+    flat = state_lib.warm_psd(4, dirty, bump)
+    sub = state_lib.warm_psd_sub(4, 1, dirty[:, None], bump)
+    assert sub.shape == (4, 1)
+    assert np.array_equal(state_lib.fold_subblock_psd(sub), flat)
+    calm_f = state_lib.warm_calm(4, dirty, 3)
+    calm_s = state_lib.warm_calm_sub(4, 1, dirty[:, None], 3)
+    assert np.array_equal(calm_s[:, 0], calm_f)
+    # fold is identity on already-flat vectors
+    assert state_lib.fold_subblock_psd(flat) is flat
+    assert state_lib.converged(sub, 1.0) == state_lib.converged(flat, 1.0)
+
+
+def test_subblock_metrics_degenerate_at_one():
+    """At S = 1 every scheduled block is exactly one live sub-block:
+    mean_subblock_dispatch is identically 1.0 and sub-block retirement
+    equals block retirement."""
+    g = G.powerlaw_graph(500, avg_deg=4, seed=3, weighted=True)
+    r = StructureAwareEngine(g, A.pagerank(), CFG).run(fused=True)
+    assert r.metrics.mean_subblock_dispatch == 1.0
+    assert r.metrics.subblocks_retired == r.metrics.blocks_retired
+
+
+# -- warm streaming restarts --------------------------------------------------
+def test_warm_after_ingest_with_deletes_subblocks():
+    """Sub-block re-heat over a mutating stream (inserts + deletes)
+    matches the flat tracker's fixpoint AND a cold recompute, while
+    arming no more sub-blocks than the pigeonhole bound (S x dirty
+    blocks) and at least one per dirty block."""
+    g = G.powerlaw_graph(900, avg_deg=5, seed=3, weighted=True)
+    batches = synthetic_stream(g, 3, 40, seed=11, delete_frac=0.4,
+                               weighted=True)
+    se4 = StreamingEngine(g, A.pagerank(),
+                          dataclasses.replace(CFG, subblocks=4))
+    se1 = StreamingEngine(g, A.pagerank(), CFG)
+    cold = StreamingEngine(g, A.pagerank(), CFG, StreamConfig(warm=False))
+    for b in batches:
+        r4 = se4.ingest(b)
+        r1 = se1.ingest(b)
+        cold.ingest(b)
+        assert r4.subblocks == 4 and r1.subblocks == 1
+        assert r4.dirty_blocks == r1.dirty_blocks  # block layer untouched
+        assert r4.dirty_subblocks <= 4 * r4.dirty_blocks
+        assert r4.dirty_subblocks >= r4.dirty_blocks
+        assert r4.converged and r1.converged
+    assert _close(se4.values, se1.values, rtol=1e-4, atol=1e-5)
+    assert _close(se4.values, cold.values, rtol=1e-4, atol=1e-5)
+
+
+def test_small_batch_breaks_pigeonhole():
+    """The headline granularity win: a small edit batch's endpoints land
+    in most BLOCKS (dirty_frac near 1 — the P-pigeonhole), but arm only
+    a sliver of the SUB-BLOCK slots."""
+    g = G.powerlaw_graph(4000, avg_deg=5, seed=2, weighted=True)
+    se = StreamingEngine(g, A.pagerank(),
+                         dataclasses.replace(CFG, subblocks=8))
+    se.ingest(DeltaBatch.empty())
+    batch = list(synthetic_stream(g, 1, 10, seed=5, weighted=True))[0]
+    rep = se.ingest(batch)
+    assert rep.dirty_blocks > 0
+    assert rep.dirty_subblocks < rep.subblocks * rep.dirty_blocks
+    # finer tracking: armed fraction strictly below the block tracker's
+    assert rep.subblock_dirty_frac < rep.dirty_frac
+
+
+def test_prewarm_covers_subblock_ingest_no_recompile():
+    """Regression (prewarm satellite): after construction-time prewarm,
+    an in-place ingest + warm reconvergence at S > 1 hits only compiled
+    executables — no new jit entries, no new traces."""
+    g = G.powerlaw_graph(500, avg_deg=5, seed=8, weighted=True)
+    se = StreamingEngine(g, A.pagerank(),
+                         dataclasses.replace(CFG, subblocks=4))
+    se.ingest(DeltaBatch.empty())  # exercise the warm path once
+    eng = se.engine
+
+    def compiles():
+        fns = list(eng._fns.values()) + [eng._post]
+        return len(eng._fns), sum(f._cache_size() for f in fns)
+
+    before = compiles()
+    rep = se.ingest(DeltaBatch.of(ins=[(1, 2), (3, 4), (5, 6)]))
+    assert not rep.plan_rebuild and se.engine is eng
+    assert compiles() == before
+
+
+# -- serving ------------------------------------------------------------------
+def test_serve_subblock_parity():
+    """Lane runs inherit the sub-block masks: a query batch at S > 1
+    answers exactly like the flat service (values and per-lane
+    convergence supersteps)."""
+    g = G.powerlaw_graph(700, avg_deg=5, seed=5, weighted=True)
+
+    def serve(subblocks):
+        cfg = dataclasses.replace(CFG, subblocks=subblocks)
+        svc = QueryService(StreamingEngine(g, A.sssp(), cfg), max_lanes=2,
+                           prewarm=False)
+        qids = [svc.submit(Query(kind="sssp", source=s)) for s in (3, 77)]
+        res = {r.query_id: r for r in svc.run_pending()}
+        return [res[q] for q in qids]
+
+    r1, r4 = serve(1), serve(4)
+    for a, b in zip(r1, r4):
+        assert _close(a.values, b.values, rtol=1e-5, atol=1e-6)
+        assert a.iterations == b.iterations
+        assert a.converged and b.converged
