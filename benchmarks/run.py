@@ -48,7 +48,7 @@ def main() -> None:
                     help="graph size for the engine benchmarks")
     ap.add_argument("--suites", default=None,
                     help="comma list: runtime,convergence,io,kernels,"
-                         "streaming,stream_subblock,serving — plus "
+                         "streaming,stream_subblock,serving,ooc — plus "
                          "serving_smoke, a cheap 2-lane serving subset "
                          "(small n) CI can run without the full matrix")
     ap.add_argument("--only", default=None,
@@ -65,7 +65,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_convergence, bench_io, bench_kernels,
-                            bench_runtime, bench_serving, bench_streaming)
+                            bench_ooc, bench_runtime, bench_serving,
+                            bench_streaming)
     suites = {
         "runtime": lambda: bench_runtime.run(args.n),
         "convergence": lambda: bench_convergence.run(args.n),
@@ -76,6 +77,8 @@ def main() -> None:
         # on small warm batches (the P-pigeonhole comparison)
         "stream_subblock": lambda: bench_streaming.run_subblock(args.n),
         "serving": lambda: bench_serving.run(args.n, lanes=args.lanes),
+        # out-of-core tier: residency-budget sweep + warm-restart TTC
+        "ooc": lambda: bench_ooc.run(args.n),
         # CI smoke subset: tiny graph, 2 lanes — exercises the whole
         # serve stack (lanes, pinning, churn) without the full matrix
         "serving_smoke": lambda: bench_serving.run(min(args.n, 1500),

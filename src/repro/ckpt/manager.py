@@ -36,7 +36,38 @@ def _flatten(tree, prefix=""):
     return out
 
 
+def _treedef(tree):
+    """JSON-able structure spec: the shape of the pytree with leaves
+    replaced by their flat storage keys. Recorded in meta.json so restore
+    can rebuild the ORIGINAL container types — the key-only _unflatten
+    turns list/tuple nodes into string-keyed dicts."""
+    def spec(node, prefix=""):
+        if isinstance(node, dict):
+            return {"t": "dict",
+                    "items": {k: spec(v, f"{prefix}{k}{SEP}")
+                              for k, v in node.items()}}
+        if isinstance(node, (list, tuple)):
+            return {"t": "list" if isinstance(node, list) else "tuple",
+                    "items": [spec(v, f"{prefix}{i}{SEP}")
+                              for i, v in enumerate(node)]}
+        return {"t": "leaf", "key": prefix[:-1]}
+    return spec(tree)
+
+
+def _from_treedef(spec, flat: dict):
+    t = spec["t"]
+    if t == "dict":
+        return {k: _from_treedef(v, flat) for k, v in spec["items"].items()}
+    if t in ("list", "tuple"):
+        items = [_from_treedef(v, flat) for v in spec["items"]]
+        return items if t == "list" else tuple(items)
+    return flat[spec["key"]]
+
+
 def _unflatten(flat: dict):
+    """Key-only fallback for checkpoints written before the treedef was
+    recorded: every interior node comes back as a dict (list/tuple
+    structure is unrecoverable from the keys alone)."""
     tree: dict = {}
     for key, v in flat.items():
         parts = key.split(SEP)
@@ -60,12 +91,24 @@ class CheckpointManager:
         self.async_write = async_write
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
+        # sweep stale tmp dirs left by a crash mid-write: the published
+        # step_* dirs are complete by construction (tmp -> rename), so a
+        # leftover *.tmp is garbage by definition and must not shadow a
+        # future write to the same step
+        for name in os.listdir(directory):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # -- write ---------------------------------------------------------------
     def save(self, step: int, tree, extra_meta: dict | None = None):
+        # np.asarray preserves leaf dtypes (incl. numpy scalar dtypes —
+        # an np.int32 step must not round-trip into an int64 surprise);
+        # only plain python scalars fall back to the platform default
         flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
         meta = {"step": step, "time": time.time(),
-                "keys": sorted(flat.keys()), **(extra_meta or {})}
+                "keys": sorted(flat.keys()),
+                "treedef": _treedef(tree), **(extra_meta or {})}
         self.wait()  # one in-flight write at a time
         if self.async_write:
             self._thread = threading.Thread(
@@ -121,7 +164,11 @@ class CheckpointManager:
             meta = json.load(f)
         with np.load(os.path.join(path, "arrays.npz")) as z:
             flat = {k: z[k] for k in z.files}
-        tree = _unflatten(flat)
+        # rebuild the original container types from the recorded treedef;
+        # pre-treedef checkpoints fall back to the key-only dict shape
+        spec = meta.get("treedef")
+        tree = (_from_treedef(spec, flat) if spec is not None
+                else _unflatten(flat))
         if shardings is not None:
             tree = reshard(tree, shardings)
         return tree, meta

@@ -119,7 +119,8 @@ from repro.core.partition import (EdgeStorage, PartitionPlan, TiledStorage,
                                   build_plan)
 from repro.core.repartition import RepartitionState
 from repro.core.schedule import (Scheduler, Selection, make_device_select,
-                                 pick_width, width_ladder)
+                                 pick_width, schedule_predictor,
+                                 width_ladder)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +144,15 @@ class EngineConfig:
     subblocks: int = 1  # sub-blocks per block (hierarchical activity tracking)
     retire_after: int = 3  # consecutive sub-floor supersteps before retire
     min_width: int = 2  # narrowest dispatch-width bucket
+    # out-of-core block tier: device memory modeled as a fixed budget of
+    # resident block slots. None (default) = fully resident — no spill
+    # tier is built and the trajectory is bitwise-identical to before the
+    # tier existed. With resident_blocks < P the engine evicts cold
+    # blocks' edge tile rows to host/disk (repro.ooc.store) and pages the
+    # predicted schedule back in before each superstep; budget must be
+    # >= width + 2 (the scheduled slate plus the pinned pad blocks).
+    resident_blocks: int | None = None
+    spill_dir: str | None = None  # npz segment dir; None = host cache only
     tile_slack: float = 0.0  # spare tile capacity per block (streaming)
     spare_tiles: int = 0  # flat extra tiles per block (streaming)
     keep_dead_blocks: bool = False  # dead vertices get block slots (streaming)
@@ -595,6 +605,21 @@ class StructureAwareEngine:
         # descending dispatch-width buckets; the host picks per boundary
         self._ladder = (width_ladder(config.width, config.min_width)
                         if config.adaptive else [config.width])
+        # pad block for dispatch slots beyond the take counts: the sweeps
+        # still compute padded slots, so it is the cheapest block's id —
+        # and under an out-of-core budget it is pinned resident
+        tile_cnt = p.unified.tile_cnt
+        self.pad_id = int(np.argmin(tile_cnt)) if tile_cnt.size else 0
+        # activity state of the last completed run (the epoch-persistence
+        # record; see repro.ooc.snapshot)
+        self.last_psd: np.ndarray | None = None
+        self.last_calm: np.ndarray | None = None
+        self.spill = None
+        if (config.resident_blocks is not None
+                and config.resident_blocks < p.num_blocks):
+            from repro.ooc.store import SpillStore  # avoid import cycle
+            self.spill = SpillStore(self, config.resident_blocks,
+                                    directory=config.spill_dir)
 
     # -- one-time host preprocessing ---------------------------------------
     def _init_dead(self):
@@ -734,8 +759,14 @@ class StructureAwareEngine:
         DONATED scatters, which invalidates any outstanding reference to
         them — a caller that must keep reading this epoch across future
         commits (the query service's snapshot isolation) copies first.
-        O(m) device bytes, zero host traffic."""
-        return EdgeData(*(jnp.array(a) for a in self._ed))
+        O(m) device bytes, zero host traffic — except under an
+        out-of-core budget, where the snapshot's spilled holes are
+        materialized from the spill tier's truth (residency unchanged):
+        a pinned epoch must survive the eviction of its blocks."""
+        ed = EdgeData(*(jnp.array(a) for a in self._ed))
+        if self.spill is not None:
+            ed = self.spill.materialize(ed)
+        return ed
 
     @property
     def edge_state(self) -> EdgeData:
@@ -1043,11 +1074,9 @@ class StructureAwareEngine:
         t2 = cfg.t2
         hot_sweep, cold_sweep = self._sweeps(width)
         post = self._make_post()
-        tile_cnt = plan.unified.tile_cnt
         select = make_device_select(
             width=width, cold_frac=cfg.cold_frac,
-            min_psd=self._psd_floor(),
-            pad_id=int(np.argmin(tile_cnt)) if tile_cnt.size else 0)
+            min_psd=self._psd_floor(), pad_id=self.pad_id)
 
         floor = self._psd_floor()
 
@@ -1195,7 +1224,8 @@ class StructureAwareEngine:
         calm = jnp.asarray(calm_host)
         # host-side decisions (repartition, dispatch bucket, history) are
         # block-granular: fold the (P, S) sub-block psd to block priority
-        psd_host = state_lib.fold_subblock_psd(np.asarray(psd))
+        psd_sub_host = np.asarray(psd)
+        psd_host = state_lib.fold_subblock_psd(psd_sub_host)
         active = self._active_count(calm_host)
         dmax = jnp.zeros((p.num_blocks, cfg.subblocks), jnp.float32)
         acct = self._acct_table()
@@ -1204,13 +1234,36 @@ class StructureAwareEngine:
         depth_hist: dict[int, int] = {}
         width_iters = 0
         sb_total = 0
+        # out-of-core paging: the host scheduler twin (decision-identical
+        # to the fused device select, property-tested) predicts each
+        # superstep's block demand so it can be paged in BEFORE the sweep
+        # reads it — residency never changes the schedule, which is what
+        # makes a budget-constrained run bitwise-identical to the fully
+        # resident one. Paged chunks run one superstep at a time (the
+        # demand set changes per superstep); the dispatch bucket is still
+        # retargeted only at repartition boundaries, exactly the resident
+        # cadence, so the trajectory cannot diverge.
+        spill = self.spill
+        pred = None
+        if spill is not None:
+            from repro.ooc import prefetch as ooc_policy
+            spill.begin_run()
+            pred = schedule_predictor(self._ladder[0], i2, cfg.cold_frac,
+                                      self._psd_floor())
+        wb = self._pick_width(active, psd_host)
 
         with Timer() as t:
             it = 0
             while it < max_it:
-                wb = self._pick_width(active, psd_host)
                 chunk = self._get_chunk(wb)
-                it_end = rep.chunk_end(max_it)
+                if spill is None:
+                    it_end = rep.chunk_end(max_it)
+                else:
+                    pred.width = wb
+                    sel = pred.select(it, psd_sub_host, rep.is_hot)
+                    spill.admit(ooc_policy.demand_blocks(sel, self.pad_id),
+                                psd_host, calm_host)
+                    it_end = it + 1
                 # the device counts schedules per block (exact chunk-sized
                 # int32s, zeroed each chunk); the host expands them through
                 # the int64 accounting table at the boundary
@@ -1223,7 +1276,8 @@ class StructureAwareEngine:
                     jnp.asarray(rep.is_hot), jnp.int32(i2))
                 # the chunk's single host sync point
                 it_new = int(it_dev)
-                psd_host = state_lib.fold_subblock_psd(np.asarray(psd))
+                psd_sub_host = np.asarray(psd)
+                psd_host = state_lib.fold_subblock_psd(psd_sub_host)
                 calm_host = np.asarray(calm)
                 counts_host = np.asarray(counts, dtype=np.int64)
                 delta = counts_host @ acct
@@ -1254,10 +1308,28 @@ class StructureAwareEngine:
                 if it_new == it:  # schedule went empty: nothing left to do
                     break
                 it = it_new
-                rep.maybe_repartition(it - 1, psd_host, cfg.hot_ratio)
+                # a no-op until it - 1 reaches the boundary, so the paged
+                # per-superstep calls fire on exactly the resident cadence
+                fired = rep.maybe_repartition(it - 1, psd_host,
+                                              cfg.hot_ratio)
                 # next chunk's bucket follows the live active set, exactly
-                # like the host loop's boundary retarget
+                # like the host loop's boundary retarget. In paged mode the
+                # bucket changes ONLY at fired boundaries (the resident
+                # path's chunks always end at boundaries, so this is the
+                # same retarget cadence — a per-superstep retarget would
+                # change the cold quota and fork the trajectory).
                 active = self._active_count(calm_host)
+                if spill is None or fired:
+                    wb = self._pick_width(active, psd_host)
+                if spill is not None and fired:
+                    # activity-directed prefetch at the boundary: stage the
+                    # predicted next-superstep demand plus the hottest
+                    # non-resident blocks, swapping out retired ones only
+                    pred.width = wb
+                    nsel = pred.select(it, psd_sub_host, rep.is_hot)
+                    spill.prefetch_boundary(
+                        ooc_policy.demand_blocks(nsel, self.pad_id),
+                        psd_host, calm_host)
         metrics.iterations = it
         metrics.wall_time_s = t.elapsed
         metrics.mean_dispatch_width = width_iters / max(it, 1)
@@ -1266,6 +1338,10 @@ class StructureAwareEngine:
         metrics.subblocks_retired = self._subblocks_retired(calm_host)
         metrics.mean_subblock_dispatch = sb_total / \
             max(metrics.block_loads, 1)
+        if spill is not None:
+            spill.flush_metrics(metrics)
+        self.last_psd = psd_sub_host
+        self.last_calm = np.asarray(calm_host)
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 
@@ -1293,6 +1369,10 @@ class StructureAwareEngine:
         hslots = np.zeros(cfg.width, dtype=np.int64)
         width_iters = 0
         sb_total = 0
+        spill = self.spill
+        if spill is not None:
+            from repro.ooc import prefetch as ooc_policy
+            spill.begin_run()
 
         with Timer() as t:
             it = 0
@@ -1300,6 +1380,12 @@ class StructureAwareEngine:
                 sel: Selection = sched.select(it, psd_sub, rep.is_hot)
                 if sel.hot_ids.size == 0 and sel.cold_ids.size == 0:
                     break
+                if spill is not None:
+                    # page the selected slate in before dispatch touches it
+                    # (block 0 — the host dispatch's row padding — is
+                    # pinned resident by the store)
+                    spill.admit(ooc_policy.demand_blocks(sel, self.pad_id),
+                                psd_host, np.asarray(calm))
                 processed = np.concatenate([sel.hot_ids, sel.cold_ids])
                 # live sub-blocks actually swept this iteration, from the
                 # same pre-sweep psd the device masks derive from
@@ -1328,6 +1414,13 @@ class StructureAwareEngine:
                     calm_host = np.asarray(calm)
                     sched.width = self._pick_width(
                         self._active_count(calm_host), psd_host)
+                if fired and spill is not None:
+                    # boundary prefetch: stage the predicted next-iteration
+                    # demand + the hottest non-resident blocks
+                    nsel = sched.select(it + 1, psd_sub, rep.is_hot)
+                    spill.prefetch_boundary(
+                        ooc_policy.demand_blocks(nsel, self.pad_id),
+                        psd_host, np.asarray(calm))
                 history.append({
                     "iteration": it,
                     "psd_sum": float(psd_host[psd_host <
@@ -1354,6 +1447,10 @@ class StructureAwareEngine:
         metrics.subblocks_retired = self._subblocks_retired(calm_host)
         metrics.mean_subblock_dispatch = sb_total / \
             max(metrics.block_loads, 1)
+        if spill is not None:
+            spill.flush_metrics(metrics)
+        self.last_psd = psd_sub
+        self.last_calm = calm_host
         out = np.asarray(values)[self.plan.inv]  # back to original ids
         return RunResult(values=out, metrics=metrics, history=history)
 
@@ -1395,7 +1492,11 @@ def betweenness(graph: Graph, sources: list[int],
         res = eng.run()
         dist = res.values
         for k, v in res.metrics.as_dict().items():
-            if isinstance(v, (int, float)) and k != "converged":
+            # skip non-summable entries: converged, and derived rates that
+            # as_dict computes from counters (read-only properties)
+            if (isinstance(v, (int, float)) and k != "converged"
+                    and not isinstance(getattr(type(total), k, None),
+                                       property)):
                 setattr(total, k, getattr(total, k) + v)
         # sigma: #shortest paths, level-synchronous accumulation
         finite = dist < algos.INF / 2

@@ -47,9 +47,27 @@ class Metrics:
     # subblocks == 1)
     subblocks_retired: int = 0  # sub-blocks retired at end (calm >= limit)
     mean_subblock_dispatch: float = 0.0  # live sub-blocks per block load
+    # out-of-core residency accounting (all zero when the run is fully
+    # resident — resident_blocks unset or >= P). These audit the spill
+    # tier's traffic; they are NOT part of the algorithmic trajectory, so
+    # the budget-vs-resident bitwise parity tests exclude them.
+    spill_evictions: int = 0  # blocks evicted device -> spill tier
+    bytes_spilled: int = 0  # tile-row bytes moved off-device
+    prefetch_hits: int = 0  # scheduled-block demands already resident
+    prefetch_misses: int = 0  # demand fetches the prefetcher missed
+    bytes_fetched: int = 0  # tile-row bytes scattered back on demand/prefetch
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Fraction of scheduled-block demands that were already resident
+        when the superstep needed them (1.0 when nothing ever spilled)."""
+        total = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / total if total else 1.0
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["prefetch_hit_rate"] = self.prefetch_hit_rate
+        return d
 
     def absorb_counters(self, counters) -> None:
         """Add a (len(COUNTER_FIELDS),) device-counter flush (cumulative
@@ -104,6 +122,13 @@ class StreamMetrics:
     subblocks_retired: int = 0  # cumulative end-of-batch retired sub-blocks
     subblock_loads: int = 0  # live sub-blocks actually swept across runs
     subblock_load_slots: int = 0  # block loads across warm runs (denominator)
+    # out-of-core residency accounting across warm reconvergences (zero
+    # when the engine runs fully resident)
+    spill_evictions: int = 0
+    bytes_spilled: int = 0
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    bytes_fetched: int = 0
 
     @property
     def dirty_frac(self) -> float:
@@ -129,6 +154,13 @@ class StreamMetrics:
         return self.width_iterations / max(self.iterations, 1)
 
     @property
+    def prefetch_hit_rate(self) -> float:
+        """Scheduled-block demands already resident, across warm runs
+        (1.0 when nothing ever spilled)."""
+        total = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / total if total else 1.0
+
+    @property
     def upload_frac(self) -> float:
         return self.bytes_uploaded / max(self.bytes_full, 1)
 
@@ -145,6 +177,7 @@ class StreamMetrics:
         d["mean_dispatch_width"] = self.mean_dispatch_width
         d["subblock_dirty_frac"] = self.subblock_dirty_frac
         d["mean_subblock_dispatch"] = self.mean_subblock_dispatch
+        d["prefetch_hit_rate"] = self.prefetch_hit_rate
         return d
 
 

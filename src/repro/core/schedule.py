@@ -137,6 +137,24 @@ def make_device_select(width: int, cold_frac: float,
     return select
 
 
+def schedule_predictor(width: int, i2: int, cold_frac: float,
+                       min_psd: float) -> Scheduler:
+    """The out-of-core paging tier's lookahead: a host Scheduler twin of
+    the fused device select. Because the two implementations are kept
+    decision-identical (same blocks, same order, same tie-breaks — the
+    shared property test is load-bearing here, not just a regression
+    net), one numpy ``select`` call tells the spill tier exactly which
+    blocks the imminent device superstep will read, BEFORE the device
+    runs it. That is what lets ``repro.ooc.store.SpillStore`` page the
+    demand set in ahead of the sweep without ever changing the schedule:
+    a budget-constrained run stays bitwise-identical to the fully
+    resident one. The engine retargets ``width`` at repartition
+    boundaries (mutate ``.width`` — the cold quota is width-dependent,
+    so the predictor must track the live dispatch bucket exactly)."""
+    return Scheduler(width=width, i2=i2, cold_frac=cold_frac,
+                     min_psd=min_psd)
+
+
 # -- adaptive active-set helpers ---------------------------------------------
 def width_ladder(width: int, min_width: int = 2) -> list[int]:
     """Descending dispatch-width buckets: the configured width, then powers

@@ -1,0 +1,76 @@
+"""Activity-directed residency policy (pure numpy, no device state).
+
+The engine already predicts its own future: the host
+:class:`repro.core.schedule.Scheduler` is property-tested
+decision-identical to the fused device select, so one numpy ``select``
+call tells the spill tier exactly which blocks the imminent superstep
+will read. These helpers turn that prediction plus the PSD/calm activity
+state into residency decisions:
+
+  * :func:`demand_blocks` — the block set a superstep touches (scheduled
+    hot + cold slots, plus the pad block every padded slot computes);
+  * :func:`rank_fetch_candidates` — non-resident blocks worth staging
+    ahead of need, hottest PSD first (UNSEEN re-heats sort to the front,
+    exactly the blocks the next wave must sweep);
+  * :func:`rank_victims` — eviction order: most-calm first, then lowest
+    PSD, then block id. Retired/calm blocks — the paper's cold partition
+    — ARE the spill set; ``retired_only`` restricts a speculative swap to
+    blocks the active set has already abandoned, while a demand eviction
+    (must make room NOW) takes the calmest victim unconditionally.
+
+All ranking is deterministic (stable orders, id tie-breaks) so a
+budget-constrained run makes the same residency decisions every time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedule import Selection
+
+
+def demand_blocks(sel: Selection, pad_id: int) -> np.ndarray:
+    """Unique block ids the imminent superstep will read: every scheduled
+    hot/cold slot plus ``pad_id`` (slots beyond the take counts carry the
+    pad block and the fused sweeps still compute it)."""
+    return np.unique(np.concatenate(
+        [sel.hot_ids.astype(np.int64), sel.cold_ids.astype(np.int64),
+         np.array([pad_id], dtype=np.int64)]))
+
+
+def fold_calm(calm: np.ndarray | None) -> np.ndarray | None:
+    """(P, S) sub-block calm counters -> block calm: a block is only as
+    retired as its least-calm sub-block (matches the engine's
+    ``_active_count`` definition of a live block)."""
+    if calm is None:
+        return None
+    calm = np.asarray(calm)
+    return calm.min(axis=-1) if calm.ndim == 2 else calm
+
+
+def rank_fetch_candidates(psd_blk: np.ndarray, resident: np.ndarray,
+                          floor: float) -> np.ndarray:
+    """Non-resident blocks worth prefetching, hottest first. Blocks under
+    the scheduler's pruning floor are excluded — they cannot be scheduled
+    until something re-arms them, and fetching them would only churn the
+    budget. Ties break by block id (stable sort on -psd)."""
+    cand = np.flatnonzero(~resident & (psd_blk >= floor))
+    return cand[np.argsort(-psd_blk[cand], kind="stable")]
+
+
+def rank_victims(psd_blk: np.ndarray, calm_blk: np.ndarray | None,
+                 resident: np.ndarray, protect: np.ndarray,
+                 retire_after: int, retired_only: bool) -> np.ndarray:
+    """Eviction candidates among the resident, unprotected blocks, coldest
+    first: most consecutive calm supersteps, then lowest PSD, then block
+    id. With ``retired_only`` only blocks past the retire threshold
+    qualify (speculative prefetch swaps must not evict the active set);
+    without it the calmest block goes regardless (demand evictions must
+    make room). ``protect`` is a (P,) bool mask (demand set + pins)."""
+    cand = np.flatnonzero(resident & ~protect)
+    if calm_blk is None:
+        return cand[np.argsort(psd_blk[cand], kind="stable")]
+    if retired_only:
+        cand = cand[calm_blk[cand] >= retire_after]
+    # np.lexsort: last key is primary -> calm desc, then psd asc, then the
+    # original (ascending id) order for full ties
+    return cand[np.lexsort((psd_blk[cand], -calm_blk[cand]))]

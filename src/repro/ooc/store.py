@@ -1,0 +1,327 @@
+"""SpillStore: per-block residency over the unified tiled layout.
+
+Device memory is modeled as a fixed budget of resident block slots
+(``EngineConfig.resident_blocks``). A non-resident block's edge tile rows
+are *really* gone from the device — eviction scatters invalidated rows
+over them through the engine's donated row-scatter path — and live in a
+host payload cache and/or per-block npz disk segments (written by an
+async single-writer thread in the style of ``repro.ckpt.manager``). The
+engine demand-fetches every block its predicted schedule needs *before*
+entering the superstep, so the schedule itself never changes: a
+budget-constrained run is bitwise-identical (values and algorithmic
+counters) to the fully resident one — the property the OOC tests pin.
+
+What spills: the per-block EDGE tile rows (src / dst_local / w / valid —
+the O(m) state). Vertex values, PSD/calm activity and aux stay resident:
+the sweeps are pull-mode (any scheduled block gathers ``values[e_src]``
+graph-wide), so value slices of unscheduled blocks are still read every
+superstep, and the activity state is exactly what the prefetch policy
+steers by. Those are O(n) and O(P*S); the edge tiles are the memory
+story.
+
+Payload source of truth, in priority order:
+
+  1. ``row_source`` — a host-side truth oracle (the streaming engine
+     wires ``MutableTiledState.rows2d`` here), always current under
+     ingest mutation;
+  2. the host payload cache captured at eviction time;
+  3. the npz disk segment (``keep_host=False`` drops the cache once the
+     segment is durable — the graphs-bigger-than-RAM tier).
+
+``on_evict`` fires before the device rows are invalidated so the serve
+layer can preserve pinned epoch snapshots (see
+``StreamingEngine.snapshot``); ``materialize`` rebuilds a fully-resident
+:class:`EdgeData` copy for such pins without changing residency.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EdgeData, tile_coverage
+from repro.ooc import prefetch as policy
+
+
+class _AsyncSegmentWriter:
+    """Single daemon writer draining (block, payload) jobs to atomic npz
+    segments — the ckpt-manager write discipline (tmp + rename) applied
+    per block. ``wait`` drains the queue; readers call it before touching
+    a segment that might still be in flight."""
+
+    def __init__(self, directory: str):
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self._q: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def path(self, block: int) -> str:
+        return os.path.join(self.dir, f"blk_{block:06d}.npz")
+
+    def submit(self, block: int, payload: dict) -> None:
+        self._q.put((block, payload))
+
+    def _loop(self) -> None:
+        while True:
+            block, payload = self._q.get()
+            try:
+                final = self.path(block)
+                tmp = final + ".tmp.npz"
+                np.savez(tmp, **payload)
+                os.replace(tmp, final)  # atomic publish
+            finally:
+                self._q.task_done()
+
+    def wait(self) -> None:
+        self._q.join()
+
+
+class SpillStore:
+    """Residency tracker + spill tier for one engine epoch."""
+
+    PAYLOAD_FIELDS = ("src", "dst_local", "w", "valid")
+
+    def __init__(self, engine, budget: int, directory: str | None = None,
+                 keep_host: bool | None = None):
+        plan = engine.plan
+        self.engine = engine
+        self.num_blocks = int(plan.num_blocks)
+        self.budget = int(budget)
+        min_budget = int(engine.config.width) + 2  # schedule + pad + host pad
+        if self.budget < min_budget:
+            raise ValueError(
+                f"resident_blocks={self.budget} cannot hold one dispatch: "
+                f"need >= width + 2 = {min_budget} slots (the scheduled "
+                "slate plus the pinned pad blocks)")
+        self.resident = np.ones(self.num_blocks, dtype=bool)
+        # the pad block fills every non-ok dispatch slot (the sweeps still
+        # compute it) and the host loop pads its chunks with block 0 —
+        # both must always be resident
+        self.pinned = np.zeros(self.num_blocks, dtype=bool)
+        self.pinned[[0, engine.pad_id]] = True
+        self.floor = engine._psd_floor()
+        self.retire_after = int(engine.config.retire_after)
+        ts = plan.unified.tile_start.astype(np.int64)
+        tc = plan.unified.tile_cnt.astype(np.int64)
+        self._rows = [np.arange(ts[b], ts[b] + tc[b], dtype=np.int64)
+                      for b in range(self.num_blocks)]
+        self.row_source = None  # callable(rows) -> payload dict, or None
+        self.on_evict = None  # pre-invalidation hook (epoch-pin preservation)
+        self._cache: dict[int, dict] = {}
+        self._writer = (_AsyncSegmentWriter(directory)
+                        if directory is not None else None)
+        self.keep_host = (self._writer is None if keep_host is None
+                          else bool(keep_host))
+        self._zero_counters()
+
+    # -- accounting ----------------------------------------------------------
+    def _zero_counters(self) -> None:
+        self.spill_evictions = 0
+        self.bytes_spilled = 0
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self.bytes_fetched = 0
+
+    def begin_run(self) -> None:
+        """Reset the per-run counters (residency itself persists across
+        runs — the out-of-core steady state)."""
+        self._zero_counters()
+
+    def flush_metrics(self, metrics) -> None:
+        metrics.spill_evictions += self.spill_evictions
+        metrics.bytes_spilled += self.bytes_spilled
+        metrics.prefetch_hits += self.prefetch_hits
+        metrics.prefetch_misses += self.prefetch_misses
+        metrics.bytes_fetched += self.bytes_fetched
+
+    @property
+    def spilled_blocks(self) -> np.ndarray:
+        return np.flatnonzero(~self.resident)
+
+    def block_rows(self, block: int) -> np.ndarray:
+        return self._rows[block]
+
+    def _payload_bytes(self, rows: int) -> int:
+        # 4B src + 4B dst offset + 4B w + 1B valid per slot
+        tile = int(self.engine.plan.unified.src.shape[1])
+        return rows * tile * 13
+
+    # -- payload plumbing ----------------------------------------------------
+    def _gather_device(self, rows: np.ndarray) -> dict:
+        """Read tile rows back off the device (engines without a host
+        truth oracle capture the payload at eviction time)."""
+        ed = self.engine.edge_state
+        r = jnp.asarray(rows)
+        return {"src": np.asarray(ed.src[r]),
+                "dst_local": np.asarray(ed.dstl[r]),
+                "w": np.asarray(ed.w[r]),
+                "valid": np.asarray(ed.valid[r])}
+
+    def _payload_of(self, block: int) -> dict:
+        """Spilled block's tile rows, from truth > cache > disk segment."""
+        if self.row_source is not None:
+            return self.row_source(self._rows[block])
+        payload = self._cache.get(block)
+        if payload is not None:
+            return payload
+        if self._writer is None:
+            raise KeyError(f"no spill payload for block {block}")
+        self._writer.wait()  # the segment may still be in flight
+        with np.load(self._writer.path(block)) as z:
+            return {k: z[k] for k in self.PAYLOAD_FIELDS}
+
+    # -- residency transitions ----------------------------------------------
+    def evict(self, blocks: np.ndarray) -> None:
+        """Move blocks' tile rows off-device: capture the payload, stage
+        the disk segment (async), then invalidate the device rows through
+        the engine's donated row scatter — the rows are really gone, not
+        just masked in host bookkeeping."""
+        blocks = np.asarray(blocks, dtype=np.int64)
+        blocks = blocks[self.resident[blocks] & ~self.pinned[blocks]]
+        if blocks.size == 0:
+            return
+        if self.on_evict is not None:
+            self.on_evict()  # pins must copy the epoch before rows vanish
+        all_rows = []
+        for b in blocks:
+            b = int(b)
+            rows = self._rows[b]
+            if self.row_source is None or self._writer is not None:
+                payload = (self.row_source(rows)
+                           if self.row_source is not None
+                           else self._gather_device(rows))
+                if self.keep_host:
+                    self._cache[b] = payload
+                if self._writer is not None:
+                    self._writer.submit(b, payload)
+            self.resident[b] = False
+            self.bytes_spilled += self._payload_bytes(rows.size)
+            all_rows.append(rows)
+        self.spill_evictions += int(blocks.size)
+        rows = np.concatenate(all_rows)
+        tile = int(self.engine.plan.unified.src.shape[1])
+        k = rows.size
+        self.engine.update_edge_rows(
+            rows,
+            src=np.zeros((k, tile), np.int32),
+            dst_local=np.zeros((k, tile), np.int32),
+            w=np.zeros((k, tile), np.float32),
+            valid=np.zeros((k, tile), bool))
+
+    def fetch(self, blocks: np.ndarray) -> None:
+        """Scatter blocks' true tile rows back into the device arrays and
+        mark them resident. The scatter dispatch is asynchronous (JAX), so
+        a boundary prefetch overlaps the following host work."""
+        blocks = np.asarray(blocks, dtype=np.int64)
+        blocks = blocks[~self.resident[blocks]]
+        if blocks.size == 0:
+            return
+        rows_l, parts = [], []
+        for b in blocks:
+            b = int(b)
+            rows_l.append(self._rows[b])
+            parts.append(self._payload_of(b))
+            self.resident[b] = True
+            self._cache.pop(b, None)
+        rows = np.concatenate(rows_l)
+        payload = {f: np.concatenate([p[f] for p in parts])
+                   for f in self.PAYLOAD_FIELDS}
+        self.bytes_fetched += self.engine.update_edge_rows(rows, **payload)
+
+    # -- the per-superstep / per-boundary driver entry points ---------------
+    def admit(self, need: np.ndarray, psd_blk: np.ndarray,
+              calm_blk: np.ndarray | None) -> None:
+        """Make the demand set resident before the superstep runs, evicting
+        the calmest unprotected residents if the budget is full. Also
+        enforces the budget itself (the first admit of a fresh engine
+        spills the initial full-resident state down to the slot count).
+        Counts hits (needed and already resident) vs misses (demand
+        fetches the prefetcher failed to stage)."""
+        need = np.asarray(need, dtype=np.int64)
+        have = self.resident[need]
+        self.prefetch_hits += int(have.sum())
+        self.prefetch_misses += int(need.size - have.sum())
+        missing = need[~have]
+        protect = self.pinned.copy()
+        protect[need] = True
+        over = (int(self.resident.sum()) + int(missing.size) - self.budget)
+        if over > 0:
+            calm_blk = policy.fold_calm(calm_blk)
+            victims = policy.rank_victims(
+                psd_blk, calm_blk, self.resident, protect,
+                self.retire_after, retired_only=False)
+            self.evict(victims[:over])
+        if missing.size:
+            self.fetch(missing)
+
+    def prefetch_boundary(self, need_next: np.ndarray, psd_blk: np.ndarray,
+                          calm_blk: np.ndarray | None) -> int:
+        """Repartition-boundary prefetch: stage the predicted next demand
+        plus the hottest non-resident blocks beyond it, filling free slots
+        first and then swapping out RETIRED residents only (a speculative
+        fetch must never evict the live active set). Returns the number of
+        blocks staged."""
+        calm_blk = policy.fold_calm(calm_blk)
+        protect = self.pinned.copy()
+        protect[np.asarray(need_next, dtype=np.int64)] = True
+        cand = policy.rank_fetch_candidates(psd_blk, self.resident,
+                                            self.floor)
+        # demand first (free, exact), then speculation by PSD rank
+        need_next = np.asarray(need_next, dtype=np.int64)
+        cand = np.concatenate(
+            [need_next[~self.resident[need_next]],
+             cand[~np.isin(cand, need_next)]])
+        staged: list[int] = []
+        free = self.budget - int(self.resident.sum())
+        victims = policy.rank_victims(psd_blk, calm_blk, self.resident,
+                                      protect, self.retire_after,
+                                      retired_only=True)
+        vi = 0
+        for b in cand:
+            if free > 0:
+                free -= 1
+            elif vi < victims.size:
+                self.evict(victims[vi:vi + 1])
+                vi += 1
+            else:
+                break
+            staged.append(int(b))
+        if staged:
+            self.fetch(np.asarray(staged, dtype=np.int64))
+        return len(staged)
+
+    # -- epoch-pin support ---------------------------------------------------
+    def materialize(self, ed: EdgeData) -> EdgeData:
+        """Fill a deep-copied :class:`EdgeData`'s spilled holes with the
+        true tile rows — what ``edge_snapshot`` hands a pinned epoch so
+        snapshot isolation survives eviction. Residency is unchanged."""
+        blocks = self.spilled_blocks
+        if blocks.size == 0:
+            return ed
+        rows_l, parts = [], []
+        for b in blocks:
+            rows_l.append(self._rows[int(b)])
+            parts.append(self._payload_of(int(b)))
+        rows = np.concatenate(rows_l)
+        payload = {f: np.concatenate([p[f] for p in parts])
+                   for f in self.PAYLOAD_FIELDS}
+        cov = tile_coverage(payload["dst_local"], payload["valid"],
+                            self.engine.config.subblocks,
+                            self.engine.plan.block_size)
+        r = jnp.asarray(rows)
+        return ed._replace(
+            src=ed.src.at[r].set(jnp.asarray(payload["src"], jnp.int32)),
+            dstl=ed.dstl.at[r].set(
+                jnp.asarray(payload["dst_local"], jnp.int32)),
+            w=ed.w.at[r].set(jnp.asarray(payload["w"], jnp.float32)),
+            valid=ed.valid.at[r].set(jnp.asarray(payload["valid"], bool)),
+            cov=ed.cov.at[r].set(jnp.asarray(cov)))
+
+    def wait(self) -> None:
+        """Drain the async segment writer (tests / clean shutdown)."""
+        if self._writer is not None:
+            self._writer.wait()

@@ -362,7 +362,13 @@ class MutableTiledState:
 
     def rows2d(self, rows: np.ndarray) -> dict:
         """Gathered (len(rows), TILE) payload of the given tile rows — the
-        host->device scatter payload, O(touched rows), never O(n_tiles)."""
+        host->device scatter payload, O(touched rows), never O(n_tiles).
+
+        Also the out-of-core tier's truth oracle: when the engine runs
+        under a residency budget, ``SpillStore.row_source`` points here,
+        so evicting a block never needs a device readback (this mirror IS
+        the device rows by the commit invariant) and a demand fetch
+        re-scatters from the same payload the streaming commit would."""
         return {"src": self.src.reshape(self.shape2d)[rows],
                 "dst_local": self.dstl.reshape(self.shape2d)[rows],
                 "w": self.w.reshape(self.shape2d)[rows],

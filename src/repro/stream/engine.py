@@ -107,6 +107,13 @@ class StreamBatchReport:
     block_loads: int = 0  # engine block loads of the reconvergence
     subblocks_retired: int = 0  # sub-blocks retired at reconvergence end
     mean_subblock_dispatch: float = 0.0  # live sub-blocks per block load
+    # out-of-core residency traffic of the warm reconvergence (all zero
+    # when the engine runs fully resident)
+    spill_evictions: int = 0
+    bytes_spilled: int = 0
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    bytes_fetched: int = 0
 
     @property
     def dirty_frac(self) -> float:
@@ -157,6 +164,14 @@ class EpochState:
 
     @property
     def ed(self) -> EdgeData:
+        if self._ed is None:
+            spill = self.engine.spill
+            if spill is not None and spill.spilled_blocks.size:
+                # safety net: never hand out a live view with spilled
+                # holes — materialize a self-contained copy instead. The
+                # eager paths (snapshot() under spill, the eviction hook,
+                # the ingest preamble) normally preserve before this fires.
+                self.preserve()
         return self._ed if self._ed is not None else self.engine.edge_state
 
     @property
@@ -203,6 +218,14 @@ class StreamingEngine:
             coupling_counts=self.W.copy(),
             out_deg=self.out_deg.copy(), in_deg=self.in_deg.copy(),
             edge_counts=np.array(self.engine.edge_counts))
+        spill = self.engine.spill
+        if spill is not None and spill.spilled_blocks.size:
+            # under an out-of-core budget the live edge state already has
+            # spilled holes: preserve now (edge_snapshot materializes the
+            # holes from the spill tier), instead of lazily at the next
+            # ingest — the pin must be readable before then
+            es.preserve()
+            self.metrics.snapshots_preserved += 1
         self._snapshots.append(weakref.ref(es))
         return es
 
@@ -228,6 +251,15 @@ class StreamingEngine:
                 es._ed = ed
         self._snapshots = []
         return copies
+
+    def _on_spill_evict(self) -> None:
+        """Spill-tier pre-eviction hook: pinned epochs must survive the
+        eviction of their blocks. The eviction scatter really invalidates
+        the device rows, so every live pin is preserved first —
+        ``edge_snapshot`` materializes any already-spilled holes from the
+        tier's truth, and the about-to-be-evicted rows are still resident
+        at hook time."""
+        self.metrics.snapshots_preserved += self._preserve_pinned()
 
     # -- epoch management ----------------------------------------------------
     def _build_epoch(self, src: np.ndarray, dst: np.ndarray,
@@ -258,6 +290,15 @@ class StreamingEngine:
         # lands straight in a narrow bucket, and paying that compile inside
         # a batch's reconverge latency would bill one batch for all
         self.engine.prewarm_buckets()
+        spill = self.engine.spill
+        if spill is not None:
+            # the host tile mirror is the truth under streaming mutation:
+            # evictions never need a device readback and fetches re-scatter
+            # CURRENT truth even for blocks mutated while spilled (an
+            # ingest commit to a non-resident block is harmless — the
+            # fetch overwrites its rows wholesale)
+            spill.row_source = self.tiles.rows2d
+            spill.on_evict = self._on_spill_evict
 
     def _prewarm_scatters(self) -> None:
         """Compile the chunked device-scatter executables at epoch build
@@ -296,6 +337,72 @@ class StreamingEngine:
         a = self.engine.plan.alpha if alpha is None else alpha
         d = (self.out_deg + a * self.in_deg)
         return d[self.engine.plan.inv]
+
+    # -- epoch persistence (warm restarts; repro.ooc.snapshot) ---------------
+    def save_epoch(self, ckpt, step: int | None = None):
+        """Persist the current epoch (edge truth + fixpoint values +
+        activity state) through a :class:`repro.ooc.snapshot
+        .GraphCheckpoint`. ``ckpt`` is a directory path or an existing
+        GraphCheckpoint; ``step`` defaults to the epoch counter. Every
+        inter-batch state is a fixpoint (ingest ends with reconvergence),
+        so the snapshot is consistent by construction. Returns the
+        checkpoint (call ``.wait()`` to block on the async writer)."""
+        from repro.ooc.snapshot import GraphCheckpoint
+        if not isinstance(ckpt, GraphCheckpoint):
+            ckpt = GraphCheckpoint(ckpt)
+        ckpt.save(self, step)
+        return ckpt
+
+    @classmethod
+    def restore(cls, ckpt, program: VertexProgram,
+                config: EngineConfig = EngineConfig(),
+                stream: StreamConfig = StreamConfig(),
+                step: int | None = None, verify: bool = True):
+        """Warm-restart a StreamingEngine from a saved epoch. The epoch
+        geometry is rebuilt deterministically from the checkpointed COO
+        (``build_plan``'s activity sort is a pure function of the edge set
+        and config — the same path every overflow batch takes), and the
+        engine warm-starts from the checkpointed fixpoint values instead
+        of ``program.init``. With ``verify`` (default) a verification
+        pass re-heats every block once (PSD = UNSEEN, universal mode) and
+        reconverges — from a fixpoint the deltas die immediately, which
+        is the measured warm-vs-cold restart win (``initial_result``
+        carries its metrics); ``verify=False`` trusts the checkpoint and
+        skips the run. A checkpoint written under one residency budget
+        restores under any other (``config.resident_blocks`` applies to
+        the NEW engine)."""
+        from repro.ooc.snapshot import GraphCheckpoint
+        if not isinstance(ckpt, GraphCheckpoint):
+            ckpt = GraphCheckpoint(ckpt)
+        tree, meta = ckpt.load(step)
+        src, dst, w = tree["edges"]
+        self = cls.__new__(cls)
+        self.program = program
+        self.stream = stream
+        self.config = dataclasses.replace(
+            config, tile_slack=stream.tile_slack,
+            spare_tiles=stream.spare_tiles, keep_dead_blocks=True)
+        self.metrics = StreamMetrics()
+        self.n = int(meta["n"])
+        self.epoch = int(meta["epoch"])
+        self._snapshots = []
+        self._build_epoch(np.asarray(src, dtype=np.int64),
+                          np.asarray(dst, dtype=np.int64),
+                          np.asarray(w, dtype=np.float32))
+        self._values = np.asarray(tree["values"])
+        self.initial_result = None
+        self.restored_meta = meta
+        if verify:
+            plan = self.engine.plan
+            vals = self._values[plan.order].astype(np.float32)
+            res = self.engine.run(warm=WarmStart(
+                values=self.engine.pad_values(vals),
+                psd=state_lib.init_psd(plan.num_blocks,
+                                       self.config.subblocks),
+                is_hot=np.ones(plan.num_blocks, dtype=bool)))
+            self._values = res.values
+            self.initial_result = res
+        return self
 
     # -- ingest --------------------------------------------------------------
     def ingest(self, batch: DeltaBatch) -> StreamBatchReport:
@@ -623,7 +730,12 @@ class StreamingEngine:
             block_loads=res.metrics.block_loads if res else 0,
             subblocks_retired=res.metrics.subblocks_retired if res else 0,
             mean_subblock_dispatch=(res.metrics.mean_subblock_dispatch
-                                    if res else 0.0))
+                                    if res else 0.0),
+            spill_evictions=res.metrics.spill_evictions if res else 0,
+            bytes_spilled=res.metrics.bytes_spilled if res else 0,
+            prefetch_hits=res.metrics.prefetch_hits if res else 0,
+            prefetch_misses=res.metrics.prefetch_misses if res else 0,
+            bytes_fetched=res.metrics.bytes_fetched if res else 0)
         self._absorb(report)
         return report
 
@@ -713,5 +825,10 @@ class StreamingEngine:
         m.subblock_loads += int(round(r.mean_subblock_dispatch *
                                       r.block_loads))
         m.subblock_load_slots += r.block_loads
+        m.spill_evictions += r.spill_evictions
+        m.bytes_spilled += r.bytes_spilled
+        m.prefetch_hits += r.prefetch_hits
+        m.prefetch_misses += r.prefetch_misses
+        m.bytes_fetched += r.bytes_fetched
         for d, cnt in r.inner_depth_hist.items():
             m.inner_depth_hist[d] = m.inner_depth_hist.get(d, 0) + cnt

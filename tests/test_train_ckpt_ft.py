@@ -116,6 +116,61 @@ def test_ckpt_async_and_atomic(tmp_path):
     assert not any(n.endswith(".tmp") for n in names)
 
 
+def test_ckpt_treedef_container_types(tmp_path):
+    """list/tuple nodes must come back as lists/tuples (the recorded
+    treedef, not the key-only dict fallback), and leaf dtypes must
+    survive — an np.int32 scalar is still int32 after the round trip."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    tree = {"edges": (np.arange(3, dtype=np.int64),
+                      np.arange(3, dtype=np.int64),
+                      np.ones(3, np.float32)),
+            "hist": [np.zeros(2), {"inner": (np.int32(7), [np.float32(1.5)])}],
+            "step": np.int32(11)}
+    mgr.save(1, tree)
+    got, meta = mgr.restore()
+    assert isinstance(got["edges"], tuple) and len(got["edges"]) == 3
+    assert isinstance(got["hist"], list)
+    assert isinstance(got["hist"][1]["inner"], tuple)
+    assert isinstance(got["hist"][1]["inner"][1], list)
+    assert got["edges"][2].dtype == np.float32
+    assert got["step"].dtype == np.int32
+    assert got["hist"][1]["inner"][0].dtype == np.int32
+    np.testing.assert_array_equal(got["edges"][0], tree["edges"][0])
+    # pre-treedef checkpoints (no spec in meta) still restore, dict-shaped
+    meta_path = os.path.join(str(tmp_path), "step_00000001", "meta.json")
+    import json
+    with open(meta_path) as f:
+        m = json.load(f)
+    del m["treedef"]
+    with open(meta_path, "w") as f:
+        json.dump(m, f)
+    old, _ = mgr.restore()
+    assert isinstance(old["edges"], dict)  # fallback loses container types
+    np.testing.assert_array_equal(old["edges"]["0"], tree["edges"][0])
+
+
+def test_ckpt_stale_tmp_sweep_crash_recovery(tmp_path):
+    """A crash mid-write leaves step_*.tmp garbage; a fresh manager must
+    sweep it so a rewrite of the same step publishes cleanly, and the
+    half-written tmp must never be visible as a restorable step."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, {"x": np.array([1.0])})
+    # simulate a crash mid-write of step 2: tmp dir with a partial npz
+    stale = os.path.join(str(tmp_path), "step_00000002.tmp")
+    os.makedirs(stale)
+    with open(os.path.join(stale, "arrays.npz"), "w") as f:
+        f.write("partial")
+    assert mgr.list_steps() == [1]  # tmp is not a step
+    got, meta = mgr.restore()
+    assert meta["step"] == 1
+    # recovery: a new manager (the restarted process) sweeps the garbage
+    mgr2 = CheckpointManager(str(tmp_path), async_write=False)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    mgr2.save(2, {"x": np.array([2.0])})
+    got, meta = mgr2.restore()
+    assert meta["step"] == 2 and got["x"][0] == 2.0
+
+
 def test_resume_equivalence(tmp_path):
     """train 6 steps == train 3, checkpoint, restore, train 3 more."""
     cfg = configs.reduced(configs.get("llama3p2_1b"))
