@@ -1,0 +1,28 @@
+"""Static contract analysis for the structure-aware engine.
+
+Three layers, one CLI (``python -m repro.analysis``):
+
+  * :mod:`repro.analysis.contracts` — machine-readable contract markers
+    (``@elementwise``, ``@structure_independent``,
+    ``@decision_identical``, ``@one_executable_per``,
+    ``@deterministic``) and the registry ``discover()`` walks;
+  * :mod:`repro.analysis.lint` — repo-specific AST rules over
+    ``src/repro`` (host syncs inside traced code, reads after donation,
+    loop-varying closure captures in jitted functions, nondeterminism in
+    schedule-affecting modules);
+  * :mod:`repro.analysis.tracecheck` — abstract-eval enforcement of the
+    registered contracts plus golden-jaxpr hashing of the compiled entry
+    points (``golden_jaxprs.json``).
+
+Import cost matters: this package is imported by the engine modules for
+the decorators, so ``contracts`` must stay stdlib-only (``lint`` and
+``tracecheck`` are only imported by the CLI and tests).
+"""
+from repro.analysis.contracts import (Contract, decision_identical,
+                                      deterministic, discover, elementwise,
+                                      one_executable_per, registry,
+                                      structure_independent)
+
+__all__ = ["Contract", "decision_identical", "deterministic", "discover",
+           "elementwise", "one_executable_per", "registry",
+           "structure_independent"]

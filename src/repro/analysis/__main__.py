@@ -1,0 +1,108 @@
+"""CLI: ``python -m repro.analysis [--check|--update-golden]``.
+
+``--check`` (the default) runs, in order:
+
+  1. the bytecode guard — fail if ``__pycache__``/``.pyc`` files are
+     git-tracked or staged (they are .gitignore'd; staging one is always
+     an accident);
+  2. the AST lint rules over ``src/repro`` (or ``--paths``);
+  3. contract discovery + trace-time enforcement (skippable with
+     ``--no-trace`` for the pure-AST fast path);
+  4. the golden-jaxpr comparison (same-jax-version only).
+
+Exit status is the number of findings, capped at 1 — a clean tree exits
+0. ``--update-golden`` regenerates ``golden_jaxprs.json`` in place.
+``--extra-contracts mod[,mod...]`` imports extra modules (e.g. a test
+fixture) before discovery so their decorated functions are checked too.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import lint
+
+REPO_SRC = Path(__file__).resolve().parents[2]  # .../src
+DEFAULT_LINT_PATH = REPO_SRC / "repro"
+
+
+def bytecode_guard() -> list[lint.Finding]:
+    """Fail if compiled bytecode is tracked or staged. Respects the
+    repo's .gitignore by construction: ``git ls-files --cached`` lists
+    exactly what git will commit."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--cached"],
+            capture_output=True, text=True, timeout=30,
+            cwd=REPO_SRC.parent, check=True).stdout
+    except (OSError, subprocess.SubprocessError):
+        return []  # not a git checkout (e.g. an installed wheel): no-op
+    findings = []
+    for line in out.splitlines():
+        if line.endswith(".pyc") or "__pycache__" in line:
+            findings.append(lint.Finding(
+                "RA005", line, 0,
+                "compiled bytecode is staged/tracked — `git rm --cached` "
+                "it (the path is .gitignore'd)"))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--check", action="store_true", default=False,
+                    help="run all layers (the default action)")
+    ap.add_argument("--update-golden", action="store_true",
+                    help="regenerate analysis/golden_jaxprs.json")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the trace-time layers (pure-AST mode)")
+    ap.add_argument("--extra-contracts", default=None,
+                    help="comma-separated modules to import before "
+                         "contract discovery (fixture hooks)")
+    args = ap.parse_args(argv)
+
+    if args.update_golden:
+        from repro.analysis import tracecheck
+        payload = tracecheck.write_golden()
+        print(f"wrote {tracecheck.GOLDEN_PATH} "
+              f"({len(payload['entries'])} entries, "
+              f"jax {payload['jax_version']})")
+        return 0
+
+    findings = list(bytecode_guard())
+    paths = args.paths if args.paths else [DEFAULT_LINT_PATH]
+    findings += lint.lint_paths(paths)
+
+    if not args.no_trace:
+        from repro.analysis import contracts, tracecheck
+        discovered = contracts.discover()
+        if args.extra_contracts:
+            for mod in args.extra_contracts.split(","):
+                importlib.import_module(mod.strip())
+            discovered = contracts.registry()
+        findings += tracecheck.check_contracts(discovered)
+        golden_findings, status = tracecheck.check_golden()
+        findings += golden_findings
+        if status == "skipped":
+            import jax
+            print(f"golden jaxprs: SKIPPED (file traced under a "
+                  f"different jax than {jax.__version__}; regenerate "
+                  f"with --update-golden to re-arm)")
+        n_contracts = len(discovered)
+    else:
+        n_contracts = 0
+
+    for f in findings:
+        print(f)
+    layers = "lint" if args.no_trace else (
+        f"lint+trace ({n_contracts} contracts)")
+    print(f"repro.analysis: {len(findings)} finding(s) [{layers}]")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

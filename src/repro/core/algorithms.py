@@ -13,6 +13,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import elementwise, structure_independent
 from repro.core.graph import Graph
 
 INF = np.float32(1e18)  # finite 'infinity': keeps inf-inf NaNs out of f32 math
@@ -28,11 +29,9 @@ class VertexProgram:
     monotone_cooling: bool  # True -> barrier repartitioning is sound (PR-like)
     damping: float = 0.85
     # init(graph) -> (values (n,), aux (n,)); aux is per-vertex constant
-    # data. Contract for streaming programs with a reset_on_delete hook:
-    # the VALUES must be structure-independent (a function of n and
-    # program parameters only, like every registered program's) — the
-    # streaming engine re-applies an epoch-time init snapshot to reset
-    # vertices instead of re-running init on the mutated graph.
+    # data. Registered inits carry @structure_independent
+    # (repro.analysis.contracts) — see that decorator for the normative
+    # statement of why streaming delete-resets depend on it.
     init: Callable[[Graph], tuple[np.ndarray, np.ndarray]] = None
     # edge_map(src_val, src_aux, w) -> message
     edge_map: Callable[[Array, Array, Array], Array] = None
@@ -41,11 +40,11 @@ class VertexProgram:
     # sd_delta(old_block, new_block) -> nonnegative activity contribution
     sd_delta: Callable[[Array, Array], Array] = None
     # -- streaming hooks (repro.stream) -------------------------------------
-    # aux_fn(out_deg, in_deg) -> aux: recompute the per-vertex constant from
-    # incrementally-maintained degrees after an edge delta. Must be
-    # ELEMENTWISE (the streaming engine evaluates it on just the vertices
-    # whose degrees changed). None => aux is degree-independent and
-    # survives mutation unchanged.
+    # aux_fn(out_deg, in_deg) -> aux: recompute the per-vertex constant
+    # from incrementally-maintained degrees after an edge delta.
+    # Registered aux_fns carry @elementwise (repro.analysis.contracts) —
+    # the normative statement of the slicing the streaming engine does.
+    # None => aux is degree-independent and survives mutation unchanged.
     aux_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None
     # aux_delta(values, aux_old, aux_new) -> nonnegative per-edge bound on
     # |edge_map(v, aux_new, w) - edge_map(v, aux_old, w)| for the vertices
@@ -147,26 +146,32 @@ def _invalidated_by_delete(successors, n: int, dist: np.ndarray,
 
 
 def pagerank(damping: float = 0.85) -> VertexProgram:
+    @structure_independent
     def init(g: Graph):
         vals = np.full(g.n, 1.0 / g.n, dtype=np.float32)
         aux = np.maximum(g.out_deg, 1).astype(np.float32)
         return vals, aux
 
+    @elementwise
     def edge_map(src_val, src_aux, w):
         del w
         return src_val / src_aux
 
+    @elementwise(shapes=((8,), (8,), "static"))
     def apply(old, agg, n_total):
         del old
         return (1.0 - damping) / n_total + damping * agg
 
+    @elementwise
     def sd_delta(old, new):  # Eq. 3
         return jnp.abs(new - old)
 
+    @elementwise
     def aux_fn(out_deg, in_deg):
         del in_deg
         return np.maximum(out_deg, 1).astype(np.float32)
 
+    @elementwise
     def aux_delta(values, aux_old, aux_new):
         # edge_map is v / aux: the per-edge message change of a vertex whose
         # out-degree aux moved is exactly |v| * |1/old - 1/new|
@@ -181,19 +186,23 @@ def pagerank(damping: float = 0.85) -> VertexProgram:
 
 
 def sssp(source: int = 0) -> VertexProgram:
+    @structure_independent
     def init(g: Graph):
         vals = np.full(g.n, INF, dtype=np.float32)
         vals[source] = 0.0
         return vals, np.zeros(g.n, dtype=np.float32)
 
+    @elementwise
     def edge_map(src_val, src_aux, w):
         del src_aux
         return src_val + w
 
+    @elementwise(shapes=((8,), (8,), "static"))
     def apply(old, agg, n_total):
         del n_total
         return jnp.minimum(old, agg)
 
+    @elementwise
     def sd_delta(old, new):  # Eq. 4: min of the two results, on change
         return jnp.where(new < old, jnp.minimum(new, old), 0.0)
 
@@ -213,19 +222,23 @@ def sssp(source: int = 0) -> VertexProgram:
 
 
 def bfs(source: int = 0) -> VertexProgram:
+    @structure_independent
     def init(g: Graph):
         vals = np.full(g.n, INF, dtype=np.float32)
         vals[source] = 0.0
         return vals, np.zeros(g.n, dtype=np.float32)
 
+    @elementwise
     def edge_map(src_val, src_aux, w):
         del src_aux, w
         return src_val + 1.0
 
+    @elementwise(shapes=((8,), (8,), "static"))
     def apply(old, agg, n_total):
         del n_total
         return jnp.minimum(old, agg)
 
+    @elementwise
     def sd_delta(old, new):
         return jnp.where(new < old, 1.0, 0.0)
 
@@ -248,17 +261,21 @@ def cc() -> VertexProgram:
     """Connected components via max-label propagation (paper: 'take a
     maximum'); requires the symmetrized graph."""
 
+    @structure_independent
     def init(g: Graph):
         return np.arange(g.n, dtype=np.float32), np.zeros(g.n, np.float32)
 
+    @elementwise
     def edge_map(src_val, src_aux, w):
         del src_aux, w
         return src_val
 
+    @elementwise(shapes=((8,), (8,), "static"))
     def apply(old, agg, n_total):
         del n_total
         return jnp.maximum(old, agg)
 
+    @elementwise
     def sd_delta(old, new):  # the larger of the two results, on change
         return jnp.where(new > old, jnp.maximum(new, old), 0.0)
 
@@ -315,13 +332,15 @@ class LaneProgram:
     ``lane_init(n, params)`` builds that data on the host: ``params`` is
     one entry per lane (a source id, or a personalization set) and the
     result is ``(values (n, L) float32, vconst (n, L) float32 | None)`` in
-    ORIGINAL vertex ids. The values must be structure-independent (same
-    contract as :meth:`VertexProgram.init`), because query lanes run over
-    an epoch snapshot whose degrees are maintained incrementally.
+    ORIGINAL vertex ids. Registered lane_inits carry
+    @structure_independent (repro.analysis.contracts) — the normative
+    statement — because query lanes run over an epoch snapshot whose
+    degrees are maintained incrementally.
 
     ``aux_fn(out_deg, in_deg)`` supplies the family's per-vertex constant
-    from the snapshot's degree arrays (elementwise, like
-    ``VertexProgram.aux_fn``); None means the family ignores aux.
+    from the snapshot's degree arrays; registered aux_fns carry
+    @elementwise, same as ``VertexProgram.aux_fn``. None means the family
+    ignores aux.
     """
 
     name: str
@@ -359,17 +378,21 @@ def _source_lane_values(n: int, sources: list) -> np.ndarray:
 def k_source_sssp() -> LaneProgram:
     """L independent single-source shortest-path queries per sweep."""
 
+    @structure_independent
     def lane_init(n, sources):
         return _source_lane_values(n, sources), None
 
+    @elementwise(shapes=((8, 4), (8,), (8,)))
     def edge_map(src_vals, src_aux, w):
         del src_aux
         return src_vals + w[:, None]
 
+    @elementwise(shapes=((8, 4), (8, 4), (8, 4), "static"))
     def apply(old, agg, vconst, n_total):
         del vconst, n_total
         return jnp.minimum(old, agg)
 
+    @elementwise(shapes=((8, 4), (8, 4)))
     def sd_delta(old, new):  # Eq. 4 per lane
         return jnp.where(new < old, jnp.minimum(new, old), 0.0)
 
@@ -382,17 +405,21 @@ def k_source_sssp() -> LaneProgram:
 def k_source_bfs() -> LaneProgram:
     """L independent BFS (unit-weight distance) queries per sweep."""
 
+    @structure_independent
     def lane_init(n, sources):
         return _source_lane_values(n, sources), None
 
+    @elementwise(shapes=((8, 4), (8,), (8,)))
     def edge_map(src_vals, src_aux, w):
         del src_aux, w
         return src_vals + 1.0
 
+    @elementwise(shapes=((8, 4), (8, 4), (8, 4), "static"))
     def apply(old, agg, vconst, n_total):
         del vconst, n_total
         return jnp.minimum(old, agg)
 
+    @elementwise(shapes=((8, 4), (8, 4)))
     def sd_delta(old, new):
         return jnp.where(new < old, 1.0, 0.0)
 
@@ -410,6 +437,7 @@ def k_personalized_pagerank(damping: float = 0.85) -> LaneProgram:
     Dangling mass vanishes exactly as in the registered ``pagerank``
     program (aux = max(out_deg, 1))."""
 
+    @structure_independent
     def lane_init(n, resets):
         r = np.zeros((n, len(resets)), dtype=np.float32)
         for lane, rs in enumerate(resets):
@@ -432,17 +460,21 @@ def k_personalized_pagerank(damping: float = 0.85) -> LaneProgram:
         # already in place, so warm-ish convergence from lane data alone
         return r.copy(), r
 
+    @elementwise(shapes=((8, 4), (8,), (8,)))
     def edge_map(src_vals, src_aux, w):
         del w
         return src_vals / src_aux[:, None]
 
+    @elementwise(shapes=((8, 4), (8, 4), (8, 4), "static"))
     def apply(old, agg, vconst, n_total):
         del old, n_total
         return (1.0 - damping) * vconst + damping * agg
 
+    @elementwise(shapes=((8, 4), (8, 4)))
     def sd_delta(old, new):  # Eq. 3 per lane
         return jnp.abs(new - old)
 
+    @elementwise
     def aux_fn(out_deg, in_deg):
         del in_deg
         return np.maximum(out_deg, 1).astype(np.float32)

@@ -14,7 +14,6 @@ is the stronger baseline on CPU/TPU vector hardware.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -111,6 +111,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis.contracts import one_executable_per
 from repro.core import state as state_lib
 from repro.core.algorithms import LaneProgram, VertexProgram
 from repro.core.graph import Graph, symmetrize
@@ -831,6 +832,7 @@ class StructureAwareEngine:
     _AUX_CHUNK = 256  # aux entries per scatter call
     _COUPLING_CHUNK = 16  # coupling rows per scatter call
 
+    @one_executable_per("scatter-type")
     def _chunked_scatter(self, key: str, arrays: tuple, idx: np.ndarray,
                          payloads: list, chunk: int) -> tuple[tuple, int]:
         """Scatter ``payloads`` into ``arrays`` at ``idx`` in fixed-size
@@ -1016,6 +1018,7 @@ class StructureAwareEngine:
             return values, psd, dmax
         return write_one
 
+    @one_executable_per("sequential", "width")
     def _get_fn(self, sequential: bool, width: int | None = None) -> Callable:
         width = self.config.width if width is None else width
         key = ("unified", sequential, width)
@@ -1057,6 +1060,7 @@ class StructureAwareEngine:
             metrics.edges_processed += e
 
     # -- fused device-resident loop -----------------------------------------
+    @one_executable_per("width")
     def _get_chunk(self, width: int | None = None) -> Callable:
         """Jitted multi-iteration chunk: lax.while_loop over fused
         supersteps (schedule -> hot -> cold -> staleness post -> convergence

@@ -10,9 +10,13 @@ Two implementations of the same policy:
 
   * :meth:`Scheduler.select` — numpy, host-driven loop (reference);
   * :func:`make_device_select` — jnp, traced into the fused superstep so
-    scheduling never leaves the device. Kept decision-identical to the numpy
-    version (same blocks, same order, same tie-breaking) under a shared
-    property test (tests/test_engines.py::test_device_select_matches_numpy).
+    scheduling never leaves the device. Carries
+    ``@decision_identical(twin=Scheduler.select)``
+    (repro.analysis.contracts) — the normative statement that the two
+    return the same blocks, same order, same tie-breaking — enforced by
+    the static contract gate (``python -m repro.analysis``) on top of the
+    shared property test
+    (tests/test_engines.py::test_device_select_matches_numpy).
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import decision_identical
 from repro.core import state
 
 
@@ -74,6 +79,7 @@ class Scheduler:
         return Selection(hot_ids=hot_pick, cold_ids=cold_pick)
 
 
+@decision_identical(twin=Scheduler.select)
 def make_device_select(width: int, cold_frac: float,
                        min_psd: float, pad_id: int = 0):
     """jnp port of :meth:`Scheduler.select` for the fused superstep.
@@ -141,9 +147,10 @@ def schedule_predictor(width: int, i2: int, cold_frac: float,
                        min_psd: float) -> Scheduler:
     """The out-of-core paging tier's lookahead: a host Scheduler twin of
     the fused device select. Because the two implementations are kept
-    decision-identical (same blocks, same order, same tie-breaks — the
-    shared property test is load-bearing here, not just a regression
-    net), one numpy ``select`` call tells the spill tier exactly which
+    decision-identical (the ``@decision_identical`` contract on
+    :func:`make_device_select` is load-bearing here, not just a
+    regression net), one numpy ``select`` call tells the spill tier
+    exactly which
     blocks the imminent device superstep will read, BEFORE the device
     runs it. That is what lets ``repro.ooc.store.SpillStore`` page the
     demand set in ahead of the sweep without ever changing the schedule:

@@ -39,5 +39,5 @@ def attention(q, k, v, causal: bool = True, use_pallas: bool = False):
     return ref.attention(q, k, v, causal=causal)
 
 
-def ssd_intra_chunk(c, b, u, l):
-    return _ssd.ssd_intra_chunk(c, b, u, l, interpret=_interpret())
+def ssd_intra_chunk(c, b, u, ld):
+    return _ssd.ssd_intra_chunk(c, b, u, ld, interpret=_interpret())

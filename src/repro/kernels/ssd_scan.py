@@ -9,7 +9,7 @@ which is two MXU matmuls around an elementwise decay mask — exactly one
 (Q x N)(N x Q) -> (Q x Q) Gram tile and one (Q x Q)(Q x P) -> (Q x P)
 product per (sequence-chunk, head) grid cell, all VMEM-resident.
 
-Grid: (B * nc, H). Block shapes: c/b (Q, N), u (Q, P), l (Q, 1) — Q=128,
+Grid: (B * nc, H). Block shapes: c/b (Q, N), u (Q, P), ld (Q, 1) — Q=128,
 N<=128, P<=128 keeps every operand MXU-aligned and the working set
 < 0.5 MiB. Oracle: the y_intra einsum path in models/ssm.py::ssd_chunked
 (itself validated against the naive recurrence in ref.ssd_scan).
@@ -27,9 +27,9 @@ def _kernel(c_ref, b_ref, u_ref, l_ref, o_ref, *, q: int):
     c = c_ref[0].astype(jnp.float32)  # (Q, N)
     b = b_ref[0].astype(jnp.float32)  # (Q, N)
     u = u_ref[0].astype(jnp.float32)  # (Q, P)
-    l = l_ref[0].astype(jnp.float32)  # (Q, 1) cumulative log-decay
+    ld = l_ref[0].astype(jnp.float32)  # (Q, 1) cumulative log-decay
     gram = jnp.dot(c, b.T, preferred_element_type=jnp.float32)  # (Q, Q)
-    ldiff = l - l.T  # l_q - l_s
+    ldiff = ld - ld.T  # l_q - l_s
     rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
     decay = jnp.where(rows >= cols, jnp.exp(ldiff), 0.0)
@@ -39,8 +39,8 @@ def _kernel(c_ref, b_ref, u_ref, l_ref, o_ref, *, q: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def ssd_intra_chunk(c, b, u, l, interpret: bool = True):
-    """c, b: (G, Q, N); u: (G, Q, P); l: (G, Q) cumulative log-decay.
+def ssd_intra_chunk(c, b, u, ld, interpret: bool = True):
+    """c, b: (G, Q, N); u: (G, Q, P); ld: (G, Q) cumulative log-decay.
     G = batch * num_chunks * heads (pre-flattened). Returns (G, Q, P)."""
     g, q, n = c.shape
     p = u.shape[-1]
@@ -56,4 +56,4 @@ def ssd_intra_chunk(c, b, u, l, interpret: bool = True):
         out_specs=pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((g, q, p), u.dtype),
         interpret=interpret,
-    )(c, b, u, l.reshape(g, q, 1))
+    )(c, b, u, ld.reshape(g, q, 1))

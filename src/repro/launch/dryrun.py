@@ -10,7 +10,6 @@ os.environ["XLA_FLAGS"] = (
 
 # ruff: noqa: E402
 import argparse
-import functools
 import json
 import re
 import time

@@ -148,7 +148,6 @@ def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
     ba = batch_axes(mesh)
     bspec = ba if _div(b, mesh, ba) else ()
     out = {}
-    tok_spec = NamedSharding(mesh, P(bspec or None))
 
     def named(*spec):
         return NamedSharding(mesh, P(*spec))
@@ -160,7 +159,6 @@ def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
         out["patches"] = named(bspec or None, None, None)
     if cfg.is_encdec:
         out["frames"] = named(bspec or None, None, None)
-    del tok_spec
     return out
 
 

@@ -68,7 +68,7 @@ def chunked_attention(q, k, v, causal: bool = True, chunk_q: int = 512,
         a0 = jnp.zeros((b, hkv, g, chunk_q, d), jnp.float32)
 
         def kv_step(ki, carry):
-            m, l, acc = carry
+            m, lse, acc = carry
             k_i = lax.dynamic_index_in_dim(kc, ki, 1, keepdims=False)
             v_i = lax.dynamic_index_in_dim(vc, ki, 1, keepdims=False)
             logits = jnp.einsum("bqhgd,bkhd->bhgqk",
@@ -84,10 +84,10 @@ def chunked_attention(q, k, v, causal: bool = True, chunk_q: int = 512,
             m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
             p = jnp.exp(logits - m_new)
             alpha = jnp.exp(m - m_new)
-            l = l * alpha + p.sum(-1, keepdims=True)
+            lse = lse * alpha + p.sum(-1, keepdims=True)
             acc = acc * alpha + jnp.einsum("bhgqk,bkhd->bhgqd", p,
                                            v_i.astype(jnp.float32))
-            return m_new, l, acc
+            return m_new, lse, acc
 
         # causal + dynamic_skip: only k chunks up to the diagonal (dynamic
         # bound -> while_loop, inference only); else static nk (differentiable)
@@ -95,8 +95,8 @@ def chunked_attention(q, k, v, causal: bool = True, chunk_q: int = 512,
             upper = qi * chunk_q // chunk_k + 1
         else:
             upper = nk
-        m, l, acc = lax.fori_loop(0, upper, kv_step, (m0, l0, a0))
-        out = acc / jnp.maximum(l, 1e-30)
+        m, lse, acc = lax.fori_loop(0, upper, kv_step, (m0, l0, a0))
+        out = acc / jnp.maximum(lse, 1e-30)
         return jnp.einsum("bhgqd->bqhgd", out)
 
     outs = lax.map(lambda args: q_block(*args),

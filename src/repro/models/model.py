@@ -14,7 +14,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -287,19 +286,15 @@ def _ffn_block(x, lp, cfg: ArchConfig):
 
 def _decoder_block(x, lp, cfg: ArchConfig, positions, causal=True,
                    cross_kv=None, use_pallas=False):
-    """Full-sequence decoder block. Returns (x, aux, kv, ssm_state, conv_tail)."""
+    """Full-sequence decoder block. Returns (x, aux)."""
     h = rms_norm(x, lp["ln1"])
     mix = 0.0
-    kv = None
-    ssm_state = None
-    conv_tail = None
     if cfg.has_attention:
-        a, kv = _attention_block(h, lp["attn"], cfg, positions, causal,
-                                 use_pallas=use_pallas)
+        a, _ = _attention_block(h, lp["attn"], cfg, positions, causal,
+                                use_pallas=use_pallas)
         mix = mix + a
     if cfg.has_ssm:
-        sout, ssm_state, conv_in = _ssm_block(h, lp["ssm"], cfg)
-        conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+        sout, _, _ = _ssm_block(h, lp["ssm"], cfg)
         mix = mix + sout
     if cfg.has_attention and cfg.has_ssm:
         mix = mix * 0.5  # hymba: average the parallel heads
@@ -350,7 +345,6 @@ def forward(params, cfg: ArchConfig, batch, use_pallas: bool = False,
     x = _embed_inputs(params, cfg, batch)
     b, s, _ = x.shape
     positions = jnp.arange(s, dtype=jnp.int32)[None]
-    cross_kv_all = None
     if cfg.is_encdec:
         enc_out = encode(params, cfg, batch["frames"])
 
@@ -403,25 +397,25 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
                enc_seq: int = 0) -> Params:
     cdt = jnp.dtype(cfg.dtype)
     dh = cfg.resolved_head_dim
-    l = cfg.num_layers
+    nl = cfg.num_layers
     cache: Params = {"pos": jnp.zeros((), jnp.int32)}
     if cfg.has_attention:
-        cache["k"] = jnp.zeros((l, batch, max_seq, cfg.kv_heads_eff, dh),
+        cache["k"] = jnp.zeros((nl, batch, max_seq, cfg.kv_heads_eff, dh),
                                cdt)
-        cache["v"] = jnp.zeros((l, batch, max_seq, cfg.kv_heads_eff, dh),
+        cache["v"] = jnp.zeros((nl, batch, max_seq, cfg.kv_heads_eff, dh),
                                cdt)
     if cfg.has_ssm:
         cache["ssm_state"] = jnp.zeros(
-            (l, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            (nl, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
             jnp.float32)
         conv_ch = cfg.ssm_heads * cfg.ssm_head_dim + 2 * cfg.ssm_state
         cache["conv"] = jnp.zeros(
-            (l, batch, cfg.ssm_conv_width - 1, conv_ch), cdt)
+            (nl, batch, cfg.ssm_conv_width - 1, conv_ch), cdt)
     if cfg.is_encdec:
         cache["cross_k"] = jnp.zeros(
-            (l, batch, enc_seq, cfg.kv_heads_eff, dh), cdt)
+            (nl, batch, enc_seq, cfg.kv_heads_eff, dh), cdt)
         cache["cross_v"] = jnp.zeros(
-            (l, batch, enc_seq, cfg.kv_heads_eff, dh), cdt)
+            (nl, batch, enc_seq, cfg.kv_heads_eff, dh), cdt)
     return cache
 
 

@@ -13,7 +13,6 @@ A is per-head scalar decay, dt per-head per-step.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -43,20 +42,20 @@ def ssd_chunked(x, a_log, b, c, dt, chunk: int = 128,
     dts = dt.reshape(bsz, nc, q, h).astype(f32)
 
     da = dts * a  # (B,nc,Q,H) log-decay per step
-    l = jnp.cumsum(da, axis=2)  # inclusive within-chunk cumulative log-decay
+    ld = jnp.cumsum(da, axis=2)  # inclusive within-chunk cumulative log-decay
     u = xs * dts[..., None]  # effective inputs (B,nc,Q,H,P)
 
     # --- intra-chunk (causal quadratic term) ---
     gram = jnp.einsum("bcqn,bcsn->bcqs", cs, bs)  # (B,nc,Q,Q)
     # decay from step s (exclusive) to step q (inclusive), per head
-    ldiff = l[:, :, :, None, :] - l[:, :, None, :, :]  # (B,nc,Q,S,H)
+    ldiff = ld[:, :, :, None, :] - ld[:, :, None, :, :]  # (B,nc,Q,S,H)
     causal = jnp.tril(jnp.ones((q, q), bool))
     decay = jnp.where(causal[None, None, :, :, None], jnp.exp(ldiff), 0.0)
     y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", gram, decay, u)
 
     # --- chunk states: contribution of each chunk to its final state ---
-    l_last = l[:, :, -1:, :]  # (B,nc,1,H)
-    state_decay = jnp.exp(l_last - l)  # decay from step s to chunk end
+    l_last = ld[:, :, -1:, :]  # (B,nc,1,H)
+    state_decay = jnp.exp(l_last - ld)  # decay from step s to chunk end
     chunk_states = jnp.einsum("bcqhp,bcqn,bcqh->bchpn", u, bs, state_decay)
 
     # --- inter-chunk recurrence over nc (sequential, nc is small) ---
@@ -75,7 +74,7 @@ def ssd_chunked(x, a_log, b, c, dt, chunk: int = 128,
 
     # --- inter-chunk contribution ---
     y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cs, prev_states,
-                         jnp.exp(l))
+                         jnp.exp(ld))
     y = (y_intra + y_inter).reshape(bsz, s, h, p).astype(x.dtype)
     if return_state:
         return y, final_state

@@ -1,8 +1,9 @@
 """Activity-directed residency policy (pure numpy, no device state).
 
 The engine already predicts its own future: the host
-:class:`repro.core.schedule.Scheduler` is property-tested
-decision-identical to the fused device select, so one numpy ``select``
+:class:`repro.core.schedule.Scheduler` is kept decision-identical to the
+fused device select (the ``@decision_identical`` contract on
+``make_device_select``, plus a property test), so one numpy ``select``
 call tells the spill tier exactly which blocks the imminent superstep
 will read. These helpers turn that prediction plus the PSD/calm activity
 state into residency decisions:
@@ -19,15 +20,20 @@ state into residency decisions:
     (must make room NOW) takes the calmest victim unconditionally.
 
 All ranking is deterministic (stable orders, id tie-breaks) so a
-budget-constrained run makes the same residency decisions every time.
+budget-constrained run makes the same residency decisions every time —
+every helper carries @deterministic (repro.analysis.contracts), which
+puts this module under the nondeterminism lint (RA004: no clocks, no
+unseeded randomness).
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.analysis.contracts import deterministic
 from repro.core.schedule import Selection
 
 
+@deterministic
 def demand_blocks(sel: Selection, pad_id: int) -> np.ndarray:
     """Unique block ids the imminent superstep will read: every scheduled
     hot/cold slot plus ``pad_id`` (slots beyond the take counts carry the
@@ -37,6 +43,7 @@ def demand_blocks(sel: Selection, pad_id: int) -> np.ndarray:
          np.array([pad_id], dtype=np.int64)]))
 
 
+@deterministic
 def fold_calm(calm: np.ndarray | None) -> np.ndarray | None:
     """(P, S) sub-block calm counters -> block calm: a block is only as
     retired as its least-calm sub-block (matches the engine's
@@ -47,6 +54,7 @@ def fold_calm(calm: np.ndarray | None) -> np.ndarray | None:
     return calm.min(axis=-1) if calm.ndim == 2 else calm
 
 
+@deterministic
 def rank_fetch_candidates(psd_blk: np.ndarray, resident: np.ndarray,
                           floor: float) -> np.ndarray:
     """Non-resident blocks worth prefetching, hottest first. Blocks under
@@ -57,6 +65,7 @@ def rank_fetch_candidates(psd_blk: np.ndarray, resident: np.ndarray,
     return cand[np.argsort(-psd_blk[cand], kind="stable")]
 
 
+@deterministic
 def rank_victims(psd_blk: np.ndarray, calm_blk: np.ndarray | None,
                  resident: np.ndarray, protect: np.ndarray,
                  retire_after: int, retired_only: bool) -> np.ndarray:

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis.contracts import one_executable_per
 from repro.core import state as state_lib
 from repro.core.algorithms import LaneProgram
 from repro.core.engine import (EdgeData, StructureAwareEngine, acct_table,
@@ -186,6 +187,7 @@ class LaneEngine:
             return psd, jnp.zeros_like(dmax), calm
         return post
 
+    @one_executable_per("width")
     def _get_chunk(self, width: int):
         key = ("lane_chunk", width)
         if key in self._fns:

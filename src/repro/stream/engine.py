@@ -54,8 +54,9 @@ import weakref
 
 import numpy as np
 
+from repro.analysis.contracts import decision_identical
 from repro.core import state as state_lib
-from repro.core.algorithms import VertexProgram
+from repro.core.algorithms import VertexProgram, graph_successors
 from repro.core.engine import (EdgeData, EngineConfig, RunResult,
                                StructureAwareEngine, WarmStart,
                                coupling_from_counts)
@@ -281,9 +282,10 @@ class StreamingEngine:
         # block -> block internal edge counts (staleness coupling truth)
         self.W = self.engine.coupling_counts.copy()
         self._aux = np.array(self.engine.aux)
-        # init values are structure-independent for every registered
-        # program (they depend on n and the source id only), so one epoch
-        # snapshot serves every delete-reset without rebuilding a Graph
+        # every registered init carries @structure_independent
+        # (repro.analysis.contracts — the normative statement), so one
+        # epoch snapshot serves every delete-reset without rebuilding a
+        # Graph
         self._init_values = np.asarray(self.program.init(g)[0])
         self._prewarm_scatters()
         # compile every dispatch-width bucket at epoch build: a warm batch
@@ -527,9 +529,9 @@ class StreamingEngine:
                     n_reset = int(mask.sum())
 
             # 4. aux refresh from the incremental degrees — batched to the
-            # batch's own endpoints (aux_fn is elementwise, so only
-            # vertices whose degrees moved can change), never an O(n)
-            # rescan. A changed SOURCE aux silently changes the aggregates
+            # batch's own endpoints (registered aux_fns carry @elementwise
+            # — repro.analysis.contracts — so only vertices whose degrees
+            # moved can change), never an O(n) rescan. A changed SOURCE aux silently changes the aggregates
             # of its out-neighbour blocks; programs exposing aux_delta turn
             # that into a finite PSD bump (scheduled by priority, skipped
             # below the pruning floor) instead of an UNSEEN re-heat of
@@ -699,7 +701,7 @@ class StreamingEngine:
                     bytes_up += self.engine.values_nbytes
             else:
                 # reference mode: cold full recompute on the SAME mutated
-                # storage (program init values are structure-independent)
+                # storage (sound because inits are @structure_independent)
                 res = self.engine.run()
             if res is not None:
                 self._values = res.values
@@ -782,12 +784,17 @@ class StreamingEngine:
         g = self.current_graph()
         return symmetrize(g) if self.program.needs_symmetric else g
 
+    @decision_identical(twin=graph_successors)
     def _successors(self, frontier: np.ndarray) -> tuple[np.ndarray,
                                                          np.ndarray,
                                                          np.ndarray]:
         """Out-edge oracle over ORIGINAL vertex ids for the delete-reset
         frontier closure, served from the EdgeStore's by-src buckets —
-        replaces the per-delete-batch ``from_edges`` CSR rebuild."""
+        replaces the per-delete-batch ``from_edges`` CSR rebuild. Must
+        return the same (src, dst, w) multiset as
+        :func:`repro.core.algorithms.graph_successors` over the built
+        graph (the @decision_identical twin; enforced by the stream
+        equivalence suite)."""
         plan = self.engine.plan
         ps, pd, w = self.store.successors(plan.inv[frontier])
         return plan.order[ps], plan.order[pd], w

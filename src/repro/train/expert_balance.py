@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import numpy as np
 
 from repro.models import moe as moe_lib

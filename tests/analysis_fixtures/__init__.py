@@ -1,0 +1,8 @@
+"""Seeded-violation fixtures for the repro.analysis checker tests.
+
+Every module here intentionally violates one contract or lint rule;
+tests/test_analysis.py asserts the corresponding rule FIRES on it. None
+of this code is imported by the library. Ruff is configured to skip
+this directory (pyproject per-file-ignores) — broken-on-purpose code
+would otherwise fail the style gate it exists to test.
+"""

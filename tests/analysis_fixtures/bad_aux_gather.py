@@ -1,0 +1,33 @@
+"""TC001/TC002 fixture: contract-decorated functions that violate their
+contracts — an aux_fn that gathers across vertices (rank-normalized
+degree: vertex i's aux depends on every other vertex) and an init whose
+values depend on the edge set. Importing this module registers both with
+the contract registry (--extra-contracts hook)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.contracts import elementwise, structure_independent
+
+
+@elementwise
+def aux_fn(out_deg, in_deg):
+    # argsort couples every vertex: out[i] depends on the whole array
+    order = jnp.argsort(out_deg)
+    rank = jnp.zeros_like(out_deg).at[order].set(
+        jnp.arange(out_deg.shape[0], dtype=out_deg.dtype))
+    return rank + in_deg * 0
+
+
+@elementwise
+def aux_fn_host(out_deg, in_deg):
+    # numpy host fn (probe path): normalizing by the mean couples vertices
+    del in_deg
+    return np.asarray(out_deg) / max(float(np.mean(out_deg)), 1e-9)
+
+
+@structure_independent
+def init(g):
+    # init VALUES seeded from degrees: changes whenever the edge set does
+    vals = 1.0 / np.maximum(g.out_deg, 1).astype(np.float32)
+    aux = np.maximum(g.out_deg, 1).astype(np.float32)
+    return vals, aux

@@ -1,0 +1,30 @@
+"""RA001 fixture: host-sync primitives inside traced code."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def fused_body(values, psd):
+    # .item() inside a jitted function: device->host sync per call
+    hottest = psd.argmax().item()
+    return values.at[hottest].add(1.0), psd
+
+
+run = jax.jit(fused_body)
+
+
+def make_sweep(width):
+    def sweep(values, rows):
+        # np.asarray on a traced operand materializes on host
+        host_rows = np.asarray(rows)
+        return values[host_rows[:width]]
+
+    return sweep
+
+
+def loop(values):
+    def body(i, v):
+        return v + float(v)  # float() on the traced carry
+
+    return lax.fori_loop(0, 3, body, values)

@@ -1,0 +1,15 @@
+"""RA003 fixture: a jitted function closes over a loop-varying Python
+scalar — one executable compiles per distinct value (the i2 recompile
+hazard)."""
+import jax
+
+
+def run_batches(values, batches):
+    results = []
+    for i2 in (4, 8, 16, 32):
+        def superstep(v):
+            # i2 is baked into the trace: 4 compiles for 4 cadences
+            return v * i2
+
+        results.append(jax.jit(superstep)(values))
+    return results

@@ -1,0 +1,20 @@
+"""RA004 fixture: clock/unseeded randomness in schedule-affecting code.
+
+The module opts in by carrying a @deterministic contract (exactly how
+ooc/prefetch.py is marked)."""
+import random
+import time
+
+import numpy as np
+
+from repro.analysis.contracts import deterministic
+
+
+@deterministic
+def rank_victims(psd):
+    jitter = np.random.random(psd.shape)  # unseeded: run-dependent order
+    return np.argsort(psd + jitter * 1e-9)
+
+
+def pick_epoch():
+    return int(time.time()) ^ random.getrandbits(16)

@@ -1,0 +1,22 @@
+"""RA002 fixture: a buffer is read after being passed through a
+donate_argnums position (its device memory has been reused)."""
+import jax
+import jax.numpy as jnp
+
+
+def _step(buf, delta):
+    return buf + delta
+
+
+def commit(buf, delta):
+    fn = jax.jit(_step, donate_argnums=(0,))
+    out = fn(buf, delta)
+    checksum = buf.sum()  # read of the donated (freed) buffer
+    return out, checksum
+
+
+def commit_ok(buf, delta):
+    """Rebinding the name before the next read is the correct idiom."""
+    fn = jax.jit(_step, donate_argnums=(0,))
+    buf = fn(buf, delta)
+    return buf, buf.sum()

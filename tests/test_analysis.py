@@ -1,0 +1,173 @@
+"""The contract checker (src/repro/analysis) — three layers:
+
+  * each seeded-violation fixture in tests/analysis_fixtures makes the
+    relevant rule fire (and the CLI exit nonzero);
+  * the real tree is clean (the CLI exits 0 — this is the CI gate);
+  * the golden-jaxpr file round-trips (regenerate -> identical).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import contracts, lint
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+
+def _run_cli(*args, extra_env=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    if extra_env:
+        env.update(extra_env)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+
+
+# -- AST lint rules on the seeded fixtures -----------------------------------
+def _rules(path: Path) -> set:
+    return {f.rule for f in lint.lint_file(path)}
+
+
+def test_fixture_host_sync_fires_ra001():
+    rules = _rules(FIXTURES / "bad_host_sync.py")
+    assert "RA001" in rules
+
+
+def test_fixture_read_after_donate_fires_ra002():
+    findings = lint.lint_file(FIXTURES / "bad_read_after_donate.py")
+    ra002 = [f for f in findings if f.rule == "RA002"]
+    assert ra002, findings
+    # the rebind idiom (commit_ok) must NOT be flagged: exactly one site
+    assert len(ra002) == 1
+    assert "checksum" in ra002[0].msg or ra002[0].line
+
+
+def test_fixture_loop_closure_fires_ra003():
+    assert "RA003" in _rules(FIXTURES / "bad_loop_closure.py")
+
+
+def test_fixture_nondet_fires_ra004():
+    findings = [f for f in lint.lint_file(FIXTURES / "bad_nondet.py")
+                if f.rule == "RA004"]
+    # np.random.random, time.time, random.getrandbits
+    assert len(findings) >= 3, findings
+
+
+def test_lint_clean_on_real_tree():
+    findings = lint.lint_paths([REPO / "src" / "repro"])
+    assert findings == [], findings
+
+
+# -- CLI: fixtures exit nonzero, clean tree exits zero -----------------------
+def test_cli_nonzero_on_lint_fixture():
+    r = _run_cli("--check", "--no-trace", "--paths",
+                 str(FIXTURES / "bad_host_sync.py"))
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "RA001" in r.stdout
+
+
+def test_cli_nonzero_on_contract_fixture():
+    r = _run_cli(
+        "--check", "--paths", str(FIXTURES / "bad_loop_closure.py"),
+        "--extra-contracts", "analysis_fixtures.bad_aux_gather",
+        extra_env={"PYTHONPATH": str(REPO / "tests") + os.pathsep
+                   + str(REPO / "src")})
+    assert r.returncode == 1, r.stdout + r.stderr
+    # jaxpr denylist catches the argsort aux_fn; the concrete probe
+    # catches the numpy mean-normalize; the two-graph differential
+    # catches the degree-seeded init
+    assert "TC001" in r.stdout
+    assert "TC002" in r.stdout
+
+
+def test_cli_zero_on_clean_tree():
+    r = _run_cli("--check")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 finding(s)" in r.stdout
+
+
+# -- golden jaxprs -----------------------------------------------------------
+def test_golden_round_trips():
+    import jax
+
+    from repro.analysis import tracecheck
+    committed = json.loads(tracecheck.GOLDEN_PATH.read_text())
+    if committed["jax_version"] != jax.__version__:
+        pytest.skip("golden traced under a different jax version")
+    assert tracecheck.golden_entries() == committed["entries"]
+
+
+def test_golden_drift_detected(tmp_path):
+    from repro.analysis import tracecheck
+    committed = json.loads(tracecheck.GOLDEN_PATH.read_text())
+    drifted = dict(committed,
+                   entries=dict(committed["entries"],
+                                device_select_w4="0" * 16))
+    fake = tmp_path / "golden_jaxprs.json"
+    fake.write_text(json.dumps(drifted))
+    findings, status = tracecheck.check_golden(fake)
+    assert status == "ok"
+    assert any(f.rule == "TC005" and "device_select_w4" in f.msg
+               for f in findings), findings
+
+
+def test_golden_missing_is_a_finding(tmp_path):
+    from repro.analysis import tracecheck
+    findings, status = tracecheck.check_golden(tmp_path / "nope.json")
+    assert status == "missing"
+    assert [f.rule for f in findings] == ["TC005"]
+
+
+def test_golden_other_jax_version_skips(tmp_path):
+    from repro.analysis import tracecheck
+    committed = json.loads(tracecheck.GOLDEN_PATH.read_text())
+    stale = dict(committed, jax_version="0.0.0")
+    fake = tmp_path / "golden_jaxprs.json"
+    fake.write_text(json.dumps(stale))
+    findings, status = tracecheck.check_golden(fake)
+    assert status == "skipped" and findings == []
+
+
+# -- registry ----------------------------------------------------------------
+def test_discovery_finds_all_contract_kinds():
+    reg = contracts.discover()
+    kinds = {c.kind for c in reg}
+    assert kinds == {"elementwise", "structure_independent",
+                     "decision_identical", "one_executable_per",
+                     "deterministic"}
+    # every program factory's closures re-register under one key each:
+    # repeat discovery must not grow the registry
+    n = len(reg)
+    assert len(contracts.discover()) == n
+
+
+def test_trace_checks_clean_on_registered_contracts():
+    from repro.analysis import tracecheck
+    findings = tracecheck.check_contracts(contracts.discover())
+    assert findings == [], findings
+
+
+# -- bytecode guard ----------------------------------------------------------
+def test_bytecode_guard_flags_staged_pyc(tmp_path):
+    from repro.analysis.__main__ import bytecode_guard
+    # the real checkout must be clean
+    assert bytecode_guard() == []
+    repo = tmp_path / "r"
+    repo.mkdir()
+    subprocess.run(["git", "init", "-q"], cwd=repo, check=True)
+    bad = repo / "__pycache__"
+    bad.mkdir()
+    (bad / "m.cpython-311.pyc").write_bytes(b"\x00")
+    subprocess.run(["git", "add", "-f", "__pycache__"], cwd=repo,
+                   check=True)
+    out = subprocess.run(
+        ["git", "ls-files", "--cached"], cwd=repo,
+        capture_output=True, text=True, check=True).stdout
+    assert "__pycache__/m.cpython-311.pyc" in out

@@ -132,11 +132,11 @@ def test_ssd_intra_chunk_kernel(g, q, n, p):
     c = jnp.asarray(RNG.normal(size=(g, q, n)).astype(np.float32))
     b = jnp.asarray(RNG.normal(size=(g, q, n)).astype(np.float32))
     u = jnp.asarray(RNG.normal(size=(g, q, p)).astype(np.float32))
-    l = jnp.asarray(np.cumsum(
+    ld = jnp.asarray(np.cumsum(
         RNG.uniform(-0.1, 0, size=(g, q)).astype(np.float32), axis=1))
-    got = ops.ssd_intra_chunk(c, b, u, l)
+    got = ops.ssd_intra_chunk(c, b, u, ld)
     gram = jnp.einsum("gqn,gsn->gqs", c, b)
-    ldiff = l[:, :, None] - l[:, None, :]
+    ldiff = ld[:, :, None] - ld[:, None, :]
     mask = jnp.tril(jnp.ones((q, q), bool))
     decay = jnp.where(mask[None], jnp.exp(ldiff), 0.0)
     want = jnp.einsum("gqs,gsp->gqp", gram * decay, u)

@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import configs
 from repro.ckpt import CheckpointManager
