@@ -36,6 +36,43 @@ def run():
     rows.append((f"kernels/spmv_pallas_E{e}_C{c}",
                  _time(lambda m, d: ops.edge_block_sum(m, d, c), msg, dst),
                  "interpret=True (correctness path)"))
+    # lane combine (the PPR hot spot fixed by the fused block sweep):
+    # (TILE, L) edge messages into (C, L) destination slots — the serial
+    # scatter vs the block_sweep kernel's one-hot matmul formulation.
+    # Wall time here is XLA-on-CPU; the structural win is in the derived
+    # columns: the scatter issues E*L dependent read-modify-writes on a
+    # serial scatter unit, the matmul form is L MXU passes over
+    # (128x128) systolic tiles with HBM traffic E reads + C*L writes.
+    tile, cl = 512, 128
+    for lanes in (1, 8):
+        msg_l = jnp.asarray(rng.normal(size=(tile, lanes))
+                            .astype(np.float32))
+        dst_l = jnp.asarray(rng.integers(0, cl, size=tile)
+                            .astype(np.int32))
+        cols = jax.lax.broadcasted_iota(jnp.int32, (tile, cl), 1)
+
+        def scatter(m, d):
+            return jnp.zeros((cl, m.shape[1]), jnp.float32).at[d].add(m)
+
+        def onehot(m, d):
+            ohf = (d.reshape(tile, 1) == cols).astype(jnp.float32)
+            return jnp.stack(
+                [jnp.dot(m[:, i].reshape(1, tile), ohf,
+                         preferred_element_type=jnp.float32).reshape(cl)
+                 for i in range(m.shape[1])], axis=1)
+
+        t_sc = _time(jax.jit(scatter), msg_l, dst_l)
+        t_oh = _time(jax.jit(onehot), msg_l, dst_l)
+        serial_ops = tile * lanes
+        mxu_passes = lanes * ((tile + 127) // 128) * ((cl + 127) // 128)
+        rows.append((
+            f"kernels/lane_combine_scatter_E{tile}_C{cl}_L{lanes}", t_sc,
+            f"{serial_ops} serial RMW scatter ops; HBM ~2*E*L accesses"))
+        rows.append((
+            f"kernels/lane_combine_onehot_E{tile}_C{cl}_L{lanes}", t_oh,
+            f"{mxu_passes} MXU passes ({serial_ops / mxu_passes:.0f}x "
+            f"fewer issue slots than scatter); HBM E+C*L={tile + cl * lanes}"
+            f"; wall {t_sc / t_oh:.2f}x vs scatter"))
     # attention: chunked (the lowered path) vs full reference
     q = jnp.asarray(rng.normal(size=(1, 2048, 8, 64)).astype(np.float32))
     k = jnp.asarray(rng.normal(size=(1, 2048, 2, 64)).astype(np.float32))

@@ -138,11 +138,23 @@ def main() -> None:
                             "us_per_call": round(float(us), 1),
                             "derived": derived})
     if args.json:
+        # a partial --suites run must not clobber the other suites' rows:
+        # keep any existing row whose suite was not re-run this time, so
+        # `--suites kernels --json` appends/refreshes in place
+        kept = []
+        if os.path.exists("BENCH_runtime.json"):
+            try:
+                with open("BENCH_runtime.json") as f:
+                    prev = json.load(f)
+                kept = [r for r in prev.get("rows", [])
+                        if r.get("suite") not in pick]
+            except (json.JSONDecodeError, OSError):
+                kept = []
         with open("BENCH_runtime.json", "w") as f:
-            json.dump({"meta": _host_meta(repeats), "rows": records}, f,
-                      indent=1)
-        print(f"wrote BENCH_runtime.json ({len(records)} rows)",
-              file=sys.stderr)
+            json.dump({"meta": _host_meta(repeats),
+                       "rows": kept + records}, f, indent=1)
+        print(f"wrote BENCH_runtime.json ({len(kept + records)} rows, "
+              f"{len(records)} new)", file=sys.stderr)
     if not ok:
         sys.exit(1)
 

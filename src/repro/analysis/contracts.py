@@ -30,6 +30,7 @@ CONTRACT_MODULES = (
     "repro.stream.engine",
     "repro.serve.lanes",
     "repro.ooc.prefetch",
+    "repro.kernels.block_sweep",
 )
 
 

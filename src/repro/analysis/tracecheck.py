@@ -214,12 +214,13 @@ def check_decision_identical(contract: Contract) -> list[Finding]:
 
 
 # -- one_executable_per ------------------------------------------------------
-def _tiny_engine():
+def _tiny_engine(use_pallas: bool = False):
     from repro.core.algorithms import pagerank
     from repro.core.engine import EngineConfig, StructureAwareEngine
     g, _ = _two_graphs(200)
     return StructureAwareEngine(g, pagerank(),
-                                EngineConfig(block_size=64, width=2))
+                                EngineConfig(block_size=64, width=2,
+                                             use_pallas=use_pallas))
 
 
 def check_one_executable_per(contracts: list[Contract]) -> list[Finding]:
@@ -260,6 +261,30 @@ def check_one_executable_per(contracts: list[Contract]) -> list[Finding]:
             probe(eng, fn, (True, 2), (False, 2))
         elif qual.startswith("LaneEngine._get_chunk"):
             probe(lane, fn, (2,))
+        elif qual == "make_block_sweep":
+            # module-level builder with its own memo (not an obj._fns
+            # cache): a repeat build over the same (program, geometry,
+            # mode) must return the identical sweep closure
+            from repro.kernels import block_sweep as bs
+            store = eng.plan.unified
+            args = (eng.program, store.tile_start, store.tile_cnt)
+            kwargs = dict(n_tiles=int(store.src.shape[0]),
+                          tile_w=int(store.src.shape[1]),
+                          block_size=eng.plan.block_size,
+                          n_total=eng.plan.graph.n)
+            first = fn(*args, **kwargs)
+            size = len(bs._BUILDER_CACHE)
+            again = fn(*args, **kwargs)
+            if again is not first:
+                out.append(Finding(
+                    "TC004", f"{c.module}:{qual}", 0,
+                    "@one_executable_per kernel builder minted a fresh "
+                    "sweep closure on a repeat build"))
+            elif len(bs._BUILDER_CACHE) != size:
+                out.append(Finding(
+                    "TC004", f"{c.module}:{qual}", 0,
+                    "@one_executable_per kernel builder cache grew on a "
+                    "repeat build"))
         elif qual.startswith("StructureAwareEngine._chunked_scatter"):
             # exercised through update_edge_rows: same scatter key twice
             rows = np.array([0], dtype=np.int32)
@@ -335,6 +360,28 @@ def golden_entries() -> dict[str, str]:
     entries["lane_chunk_w2_l2"] = _canonical_hash(jax.make_jaxpr(
         lane._get_chunk(w))(
         eng._ed, eng._coupling_dev, lvals, lvals, lps, lps,
+        pvec_i, pvec_i, jax.ShapeDtypeStruct((w,), jnp.int32),
+        jnp.int32(0),
+        jax.ShapeDtypeStruct((nl,), jnp.bool_),
+        jax.ShapeDtypeStruct((nl,), jnp.int32),
+        jnp.int32(0), jnp.int32(0),
+        jax.ShapeDtypeStruct((p.num_blocks,), jnp.bool_), jnp.int32(4)))
+
+    # the fused Pallas sweep paths: same tiny geometry with
+    # use_pallas=True — the hot/cold sweeps now wrap one pallas_call per
+    # block and a silent change to the kernel's trace (grid, block specs,
+    # in-kernel combine) must diff loudly here, exactly like the dense
+    # entries above
+    engp = _tiny_engine(use_pallas=True)
+    hot_p, cold_p = engp._sweeps(w)
+    entries["pallas_hot_sweep_w2"] = _canonical_hash(
+        jax.make_jaxpr(hot_p)(engp._ed, values, ps, ps, rows, ok))
+    entries["pallas_cold_sweep_w2"] = _canonical_hash(
+        jax.make_jaxpr(cold_p)(engp._ed, values, ps, ps, rows, ok))
+    lane_p = LaneEngine(engp, k_source_sssp())
+    entries["pallas_lane_chunk_w2_l2"] = _canonical_hash(jax.make_jaxpr(
+        lane_p._get_chunk(w))(
+        engp._ed, engp._coupling_dev, lvals, lvals, lps, lps,
         pvec_i, pvec_i, jax.ShapeDtypeStruct((w,), jnp.int32),
         jnp.int32(0),
         jax.ShapeDtypeStruct((nl,), jnp.bool_),

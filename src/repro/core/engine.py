@@ -295,7 +295,15 @@ def _combine_local(program: VertexProgram, msg, dst_local, block_size,
             return kops.edge_block_sum(msg, dst_local, block_size)
         return jnp.zeros(block_size, jnp.float32).at[dst_local].add(msg)
     if program.combine == "min":
+        if use_pallas:
+            from repro.kernels import ops as kops
+            return kops.edge_block_min(msg, dst_local, block_size,
+                                       float(program.identity))
         return jnp.full(block_size, program.identity).at[dst_local].min(msg)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.edge_block_max(msg, dst_local, block_size,
+                                   float(program.identity))
     return jnp.full(block_size, program.identity).at[dst_local].max(msg)
 
 
@@ -386,36 +394,53 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage,
         agg0 = jnp.full(c, program.identity)
         merge = jnp.maximum
 
+    # under use_pallas the whole per-block update (gather → edge_map →
+    # combine → apply, sub_act-masked in-kernel) is ONE fused pallas_call;
+    # the dense fori below stays the bitwise reference and its trace is
+    # untouched (the golden jaxprs pin it)
+    fused = None
+    if use_pallas:
+        from repro.kernels import ops as kops
+        fused = kops.make_block_sweep(program, store, c, n_total,
+                                      subblocks=subblocks)
+
     def process_one(ed: EdgeData, values, row, sub_act=None):
-        t0 = tile_start[row]
-
-        def tile_compute(t, agg):
-            r = t0 + t
-            e_src = ed.src[r]
-            msg = program.edge_map(values[e_src], ed.aux[e_src], ed.w[r])
-            msg = jnp.where(ed.valid[r], msg, program.identity)
-            return merge(agg,
-                         _combine_local(program, msg, ed.dstl[r], c,
-                                        use_pallas))
-
-        if sub_act is None:
-            tile_body = tile_compute
+        if fused is not None:
+            new = fused(ed, values, row, sub_act)
+            base = row * c
+            old = lax.dynamic_slice(values, (base,), (c,))
         else:
-            def tile_body(t, agg):
-                r = t0 + t
-                # skip the gather/combine when every sub-range this tile's
-                # valid destinations cover (ed.cov — precomputed per epoch,
-                # maintained per touched row by streaming commits) is
-                # masked: identity branch — the vmapped cold sweep lowers
-                # this to a select, the sequential hot sweep skips for real
-                return lax.cond((ed.cov[r] & sub_act).any(),
-                                lambda a: tile_compute(t, a),
-                                lambda a: a, agg)
+            t0 = tile_start[row]
 
-        agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
-        base = row * c
-        old = lax.dynamic_slice(values, (base,), (c,))
-        new = program.apply(old, agg, n_total)
+            def tile_compute(t, agg):
+                r = t0 + t
+                e_src = ed.src[r]
+                msg = program.edge_map(values[e_src], ed.aux[e_src],
+                                       ed.w[r])
+                msg = jnp.where(ed.valid[r], msg, program.identity)
+                return merge(agg,
+                             _combine_local(program, msg, ed.dstl[r], c,
+                                            use_pallas))
+
+            if sub_act is None:
+                tile_body = tile_compute
+            else:
+                def tile_body(t, agg):
+                    r = t0 + t
+                    # skip the gather/combine when every sub-range this
+                    # tile's valid destinations cover (ed.cov —
+                    # precomputed per epoch, maintained per touched row by
+                    # streaming commits) is masked: identity branch — the
+                    # vmapped cold sweep lowers this to a select, the
+                    # sequential hot sweep skips for real
+                    return lax.cond((ed.cov[r] & sub_act).any(),
+                                    lambda a: tile_compute(t, a),
+                                    lambda a: a, agg)
+
+            agg = lax.fori_loop(0, tile_cnt[row], tile_body, agg0)
+            base = row * c
+            old = lax.dynamic_slice(values, (base,), (c,))
+            new = program.apply(old, agg, n_total)
         vmask = (base + jnp.arange(c)) < n_live
         if sub_act is None:
             new = jnp.where(vmask, new, old)
@@ -457,7 +482,7 @@ def make_tiled_processor(program: VertexProgram, store: TiledStorage,
 
 def make_lane_processor(program: LaneProgram, store: TiledStorage,
                         block_size: int, n_live: int, n_total: int,
-                        subblocks: int = 1):
+                        subblocks: int = 1, use_pallas: bool = False):
     """Lane-axis generalization of :func:`make_tiled_processor`: vertex
     values are ``(values_len, L)`` and one pass over a block's edge tiles
     advances every lane — the edge slice (src ids, weights, validity) is
@@ -494,8 +519,38 @@ def make_lane_processor(program: LaneProgram, store: TiledStorage,
             return jnp.full((c, nl), program.identity).at[dstl].max(msg)
         merge = jnp.maximum
 
+    # the lane-batched fused kernel: one pallas_call per block sweeps all
+    # L lanes with the (C, L) accumulator VMEM-resident and the sum
+    # combine as a (C, E_t) @ (E_t, L) MXU matmul — this is the fix for
+    # the scatter-bound PPR lane combine below
+    fused = None
+    if use_pallas:
+        from repro.kernels import ops as kops
+        fused = kops.make_block_sweep(program, store, c, n_total,
+                                      subblocks=subblocks, lanes=True)
+
     def process_one(ed: EdgeData, values, vconst, row, sub_act=None):
         nl = values.shape[1]
+        if fused is not None:
+            new = fused(ed, values, vconst, row, sub_act)
+            base = row * c
+            old = lax.dynamic_slice(values, (base, 0), (c, nl))
+            vmask = (base + jnp.arange(c)) < n_live
+            if sub_act is None:
+                new = jnp.where(vmask[:, None], new, old)
+                delta = jnp.where(vmask[:, None],
+                                  program.sd_delta(old, new), 0.0)
+                cnt = jnp.maximum(vmask.sum(), 1)
+                return (base, new, delta.sum(axis=0) / cnt,
+                        delta.max(axis=0))
+            keep = vmask & jnp.repeat(sub_act, sub)
+            new = jnp.where(keep[:, None], new, old)
+            delta = jnp.where(keep[:, None], program.sd_delta(old, new),
+                              0.0)
+            dsub = delta.reshape(subblocks, sub, nl)
+            cnt = jnp.maximum(vmask.reshape(subblocks, sub).sum(axis=1), 1)
+            return (base, new, dsub.sum(axis=1) / cnt[:, None],
+                    dsub.max(axis=1))
         t0 = tile_start[row]
         if program.combine == "sum":
             agg0 = jnp.zeros((c, nl), jnp.float32)

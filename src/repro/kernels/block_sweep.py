@@ -1,0 +1,325 @@
+"""Pallas TPU kernel family: the fused VMEM-resident block sweep.
+
+One ``pallas_call`` per scheduled block fuses the whole per-block update —
+edge-tile gather → ``edge_map`` → segmented combine → ``apply`` — that the
+dense engine expresses as a ``fori_loop`` of HLO gathers and serial
+scatters (``make_tiled_processor`` / ``make_lane_processor``). The grid
+walks the block's tile rows (scalar-prefetched ``[t0, tile_cnt, base]``
+drives a dynamic index map into the SHARED tile arrays, so every block
+reuses one executable); each step streams one ``(1, TILE)`` edge tile
+HBM→VMEM while the ``(1, C)`` — or ``(C, L)`` lane — accumulator stays
+VMEM-resident across the whole loop (the accumulator pattern proven in
+``spmv.py``). ``apply`` runs in-kernel at the last grid step, so HBM
+traffic per block is exactly E edge reads + C·L value writes: the paper's
+cache-block residency claim, realized literally.
+
+Combine families:
+
+- ``sum`` — one-hot matmul on the MXU, ``(1, E_t) @ (E_t, C)`` single-lane
+  or ``(C, E_t) @ (E_t, L)`` lane-batched (the PPR scatter fix).
+- ``min`` / ``max`` — masked select against a broadcast one-hot then a
+  tree reduce over the tile axis; exact (order-independent), so SSSP/BFS
+  stay bitwise.
+
+Sub-block activity (``subblocks = S > 1``) is honored INSIDE the kernel:
+``sub_act`` rides the scalar-prefetch vector and a tile whose ``cov`` row
+misses every live sub-range leaves the accumulator untouched — the same
+identity branch the dense ``lax.cond`` takes, so parity is by
+construction, not by rounding luck.
+
+Everything here is bitwise-identical to the dense reference on this
+backend (property-tested in ``tests/test_block_sweep.py``); the dense
+path remains the oracle. ``interpret=True`` runs the same kernels under
+the Pallas interpreter on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.contracts import one_executable_per
+
+# one sweep callable per (program, tile geometry, mode): the engines build
+# their processors once per epoch, and repeated builds (prewarm, contract
+# probes) must not mint fresh closures or the jit caches downstream refill
+_BUILDER_CACHE: dict = {}
+_BUILDER_CACHE_CAP = 32
+
+
+# -- per-tile segmented min/max (the _combine_local counterpart) -------------
+def _seg_kernel(msg_ref, dst_ref, out_ref, *, tile_e: int, block_c: int,
+                combine: str, identity: float):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, identity)
+
+    msg = msg_ref[...].reshape(tile_e)
+    dst = dst_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tile_e, block_c), 1)
+    onehot = dst.reshape(tile_e, 1) == cols
+    sel = jnp.where(onehot, msg.reshape(tile_e, 1), identity)
+    if combine == "min":
+        out_ref[...] = jnp.minimum(out_ref[...],
+                                   sel.min(axis=0).reshape(1, block_c))
+    else:
+        out_ref[...] = jnp.maximum(out_ref[...],
+                                   sel.max(axis=0).reshape(1, block_c))
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "identity",
+                                             "combine", "tile_e",
+                                             "interpret"))
+def _edge_block_select(msg, dst, block_size: int, identity: float,
+                       combine: str, tile_e: int = 512,
+                       interpret: bool = True):
+    """Segmented min/max of ``msg`` into ``block_size`` slots: the scatter
+    ``full(identity).at[dst].min(msg)`` as a masked select + tree reduce
+    (exact, so bitwise vs the scatter). Pad messages are ``identity`` so
+    slot 0 is unaffected."""
+    e = msg.shape[0]
+    pad = (-e) % tile_e
+    if pad:
+        msg = jnp.pad(msg, (0, pad), constant_values=identity)
+        dst = jnp.pad(dst, (0, pad))
+    e_pad = e + pad
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, tile_e=tile_e, block_c=block_size,
+                          combine=combine, identity=identity),
+        grid=(e_pad // tile_e,),
+        in_specs=[
+            pl.BlockSpec((1, tile_e), lambda i: (0, i)),
+            pl.BlockSpec((1, tile_e), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, block_size), jnp.float32),
+        interpret=interpret,
+    )(msg.reshape(1, e_pad).astype(jnp.float32),
+      dst.reshape(1, e_pad).astype(jnp.int32))
+    return out.reshape(block_size).astype(msg.dtype)
+
+
+def edge_block_min(msg, dst, block_size: int, identity: float,
+                   tile_e: int = 512, interpret: bool = True):
+    return _edge_block_select(msg, dst, block_size, identity, "min",
+                              tile_e=tile_e, interpret=interpret)
+
+
+def edge_block_max(msg, dst, block_size: int, identity: float,
+                   tile_e: int = 512, interpret: bool = True):
+    return _edge_block_select(msg, dst, block_size, identity, "max",
+                              tile_e=tile_e, interpret=interpret)
+
+
+# -- the fused block sweep ---------------------------------------------------
+def _sweep_kernel(s_ref, *refs, edge_map, apply_fn, combine: str,
+                  identity: float, tile: int, c: int, n_total: int,
+                  t_max: int, lanes: bool, masked: bool):
+    """Grid = the block's tile rows. s_ref (scalar prefetch, SMEM) is
+    ``[t0, tile_cnt, base]`` (+ ``sub_act`` as int32 when masked); tile
+    refs are ``(1, tile)`` VMEM blocks selected by the dynamic index map;
+    values/aux (and vconst for lanes) are whole-array ANY refs (the gather
+    needs random access across block boundaries); agg/new are VMEM-
+    resident accumulator outputs revisited by every step."""
+    if masked:
+        src_ref, dstl_ref, w_ref, valid_ref, cov_ref, *rest = refs
+    else:
+        src_ref, dstl_ref, w_ref, valid_ref, *rest = refs
+        cov_ref = None
+    if lanes:
+        values_ref, aux_ref, vconst_ref, agg_ref, new_ref = rest
+    else:
+        values_ref, aux_ref, agg_ref, new_ref = rest
+        vconst_ref = None
+
+    t = pl.program_id(0)
+    s = s_ref[...]
+
+    @pl.when(t == 0)
+    def _init():
+        agg_ref[...] = jnp.full_like(agg_ref, identity)
+
+    active = t < s[1]
+    if masked:
+        # the dense path's lax.cond identity branch, in-kernel: a tile
+        # whose covered sub-ranges are all masked must leave agg untouched
+        active = active & (cov_ref[0, :] & (s[3:] > 0)).any()
+
+    @pl.when(active)
+    def _accumulate():
+        vals = values_ref[...]
+        auxv = aux_ref[...]
+        e_src = src_ref[0, :]
+        msg = edge_map(vals[e_src], auxv[e_src], w_ref[0, :])
+        valid = valid_ref[0, :]
+        msg = jnp.where(valid[:, None] if lanes else valid, msg, identity)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (tile, c), 1)
+        onehot = dstl_ref[0, :].reshape(tile, 1) == cols
+        if combine == "sum":
+            ohf = onehot.astype(jnp.float32)
+            if lanes:
+                # one (1, E_t) @ (E_t, C) matmul per lane (L is static at
+                # trace time). A single (C, E_t) @ (E_t, L) gemm is the
+                # higher-arithmetic-intensity MXU form, but its reduction
+                # blocking reassociates the sum (~1e-7 drift) — the gemv
+                # shape accumulates in edge order, which keeps the lane
+                # path bitwise vs the scatter reference
+                agg_ref[...] += jnp.stack(
+                    [jnp.dot(msg[:, lane].reshape(1, tile), ohf,
+                             preferred_element_type=jnp.float32).reshape(c)
+                     for lane in range(msg.shape[1])], axis=1)
+            else:
+                agg_ref[...] += jnp.dot(msg.reshape(1, tile), ohf,
+                                        preferred_element_type=jnp.float32)
+        else:
+            mer = jnp.minimum if combine == "min" else jnp.maximum
+            if lanes:
+                sel = jnp.where(onehot[:, :, None], msg[:, None, :],
+                                identity)
+            else:
+                sel = jnp.where(onehot, msg.reshape(tile, 1), identity)
+            red = sel.min(axis=0) if combine == "min" else sel.max(axis=0)
+            agg_ref[...] = mer(agg_ref[...],
+                               red if lanes else red.reshape(1, c))
+
+    @pl.when(t == t_max - 1)
+    def _apply():
+        base = s[2]
+        if lanes:
+            old = values_ref[pl.ds(base, c), :]
+            vc = vconst_ref[pl.ds(base, c), :]
+            new_ref[...] = apply_fn(old, agg_ref[...], vc, n_total)
+        else:
+            old = values_ref[pl.ds(base, c)]
+            new = apply_fn(old, agg_ref[...].reshape(c), n_total)
+            new_ref[...] = new.reshape(1, c)
+
+
+def _cache_put(key, sweep):
+    if len(_BUILDER_CACHE) >= _BUILDER_CACHE_CAP:
+        _BUILDER_CACHE.pop(next(iter(_BUILDER_CACHE)))
+    _BUILDER_CACHE[key] = sweep
+
+
+@one_executable_per("program", "tile geometry", "subblocks", "lanes")
+def make_block_sweep(program, tile_start, tile_cnt, *, n_tiles: int,
+                     tile_w: int, block_size: int, n_total: int,
+                     subblocks: int = 1, lanes: bool = False,
+                     interpret: bool = True):
+    """Build the fused sweep for one program over one tile geometry.
+
+    Returns ``sweep(ed, values, row[, sub_act])`` — or
+    ``sweep(ed, values, vconst, row[, sub_act])`` with ``lanes=True`` —
+    producing the block's post-``apply`` ``(C,)`` / ``(C, L)`` values
+    (pre vmask/keep masking, exactly what the dense processors compute
+    before their delta tails). Memoized per (program, geometry, mode) so
+    repeated processor builds reuse one closure and the downstream jit
+    caches stay warm.
+    """
+    ts = np.asarray(tile_start, dtype=np.int32)
+    tc = np.asarray(tile_cnt, dtype=np.int32)
+    key = (program, ts.tobytes(), tc.tobytes(), int(n_tiles), int(tile_w),
+           int(block_size), int(n_total), int(subblocks), bool(lanes),
+           bool(interpret))
+    cached = _BUILDER_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    c = block_size
+    tile = tile_w
+    t_max = int(tc.max()) if tc.size else 0
+    masked = subblocks > 1
+    is_sum = program.combine == "sum"
+    t0_d = jnp.asarray(ts)
+    tc_d = jnp.asarray(tc)
+
+    if t_max == 0 or n_tiles == 0:
+        # no tiles anywhere: the dense fori is a no-op, only apply runs
+        if lanes:
+            def sweep(ed, values, vconst, row, sub_act=None):
+                nl = values.shape[1]
+                base = row * c
+                old = lax.dynamic_slice(values, (base, 0), (c, nl))
+                vc = lax.dynamic_slice(vconst, (base, 0), (c, nl))
+                agg0 = (jnp.zeros((c, nl), jnp.float32) if is_sum
+                        else jnp.full((c, nl), program.identity))
+                return program.apply(old, agg0, vc, n_total)
+        else:
+            def sweep(ed, values, row, sub_act=None):
+                base = row * c
+                old = lax.dynamic_slice(values, (base,), (c,))
+                agg0 = (jnp.zeros(c, jnp.float32) if is_sum
+                        else jnp.full(c, program.identity))
+                return program.apply(old, agg0, n_total)
+        _cache_put(key, sweep)
+        return sweep
+
+    kern = functools.partial(
+        _sweep_kernel, edge_map=program.edge_map, apply_fn=program.apply,
+        combine=program.combine, identity=float(program.identity),
+        tile=tile, c=c, n_total=n_total, t_max=t_max, lanes=lanes,
+        masked=masked)
+
+    def _tile_map(t, s):
+        # clamped so inactive trailing steps (t >= tile_cnt) prefetch a
+        # real row; @pl.when masks their contribution
+        return (jnp.minimum(s[0] + t, n_tiles - 1), 0)
+
+    tile_spec = pl.BlockSpec((1, tile), _tile_map)
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+
+    def call(scalars, operands, nl):
+        in_specs = [tile_spec] * 4
+        if masked:
+            in_specs.append(pl.BlockSpec((1, subblocks), _tile_map))
+        in_specs += [any_spec, any_spec]  # values, aux
+        if lanes:
+            in_specs.append(any_spec)  # vconst
+            out_shape = jax.ShapeDtypeStruct((c, nl), jnp.float32)
+            out_spec = pl.BlockSpec((c, nl), lambda t, s: (0, 0))
+        else:
+            out_shape = jax.ShapeDtypeStruct((1, c), jnp.float32)
+            out_spec = pl.BlockSpec((1, c), lambda t, s: (0, 0))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(t_max,), in_specs=in_specs,
+            out_specs=[out_spec, out_spec])
+        _, new = pl.pallas_call(
+            kern, grid_spec=grid_spec, out_shape=[out_shape, out_shape],
+            interpret=interpret)(scalars, *operands)
+        return new
+
+    if lanes:
+        def sweep(ed, values, vconst, row, sub_act=None):
+            nl = values.shape[1]
+            scal = jnp.stack([t0_d[row], tc_d[row],
+                              row * c]).astype(jnp.int32)
+            if masked:
+                scal = jnp.concatenate([scal, sub_act.astype(jnp.int32)])
+                operands = (ed.src, ed.dstl, ed.w, ed.valid, ed.cov,
+                            values, ed.aux, vconst)
+            else:
+                operands = (ed.src, ed.dstl, ed.w, ed.valid,
+                            values, ed.aux, vconst)
+            return call(scal, operands, nl)
+    else:
+        def sweep(ed, values, row, sub_act=None):
+            scal = jnp.stack([t0_d[row], tc_d[row],
+                              row * c]).astype(jnp.int32)
+            if masked:
+                scal = jnp.concatenate([scal, sub_act.astype(jnp.int32)])
+                operands = (ed.src, ed.dstl, ed.w, ed.valid, ed.cov,
+                            values, ed.aux)
+            else:
+                operands = (ed.src, ed.dstl, ed.w, ed.valid,
+                            values, ed.aux)
+            return call(scal, operands, 1).reshape(c)
+
+    _cache_put(key, sweep)
+    return sweep

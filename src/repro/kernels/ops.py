@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import block_sweep as _bs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref
 from repro.kernels import spmv as _spmv
@@ -23,6 +24,30 @@ def edge_block_sum(msg: jnp.ndarray, dst: jnp.ndarray,
                    block_size: int) -> jnp.ndarray:
     return _spmv.edge_block_sum(msg, dst, block_size,
                                 interpret=_interpret())
+
+
+def edge_block_min(msg: jnp.ndarray, dst: jnp.ndarray, block_size: int,
+                   identity: float) -> jnp.ndarray:
+    return _bs.edge_block_min(msg, dst, block_size, identity,
+                              interpret=_interpret())
+
+
+def edge_block_max(msg: jnp.ndarray, dst: jnp.ndarray, block_size: int,
+                   identity: float) -> jnp.ndarray:
+    return _bs.edge_block_max(msg, dst, block_size, identity,
+                              interpret=_interpret())
+
+
+def make_block_sweep(program, store, block_size: int, n_total: int, *,
+                     subblocks: int = 1, lanes: bool = False):
+    """Build the fused per-block sweep (gather→edge_map→combine→apply in
+    one pallas_call) over ``store``'s tile geometry. See
+    :mod:`repro.kernels.block_sweep`."""
+    return _bs.make_block_sweep(
+        program, store.tile_start, store.tile_cnt,
+        n_tiles=int(store.src.shape[0]), tile_w=int(store.src.shape[1]),
+        block_size=block_size, n_total=n_total, subblocks=subblocks,
+        lanes=lanes, interpret=_interpret())
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,

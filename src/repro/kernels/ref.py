@@ -10,6 +10,18 @@ def edge_block_sum(msg: jnp.ndarray, dst: jnp.ndarray,
     return jnp.zeros(block_size, msg.dtype).at[dst].add(msg)
 
 
+def edge_block_min(msg: jnp.ndarray, dst: jnp.ndarray, block_size: int,
+                   identity: float) -> jnp.ndarray:
+    """Segment-min into block-local slots (empty slots keep identity)."""
+    return jnp.full(block_size, identity, msg.dtype).at[dst].min(msg)
+
+
+def edge_block_max(msg: jnp.ndarray, dst: jnp.ndarray, block_size: int,
+                   identity: float) -> jnp.ndarray:
+    """Segment-max into block-local slots (empty slots keep identity)."""
+    return jnp.full(block_size, identity, msg.dtype).at[dst].max(msg)
+
+
 def attention(q, k, v, causal: bool = True, scale: float | None = None):
     """Reference (quadratic) attention. q: (B, Hq, S, D); k/v: (B, Hkv, S, D)
     with Hq a multiple of Hkv (GQA)."""

@@ -261,6 +261,13 @@ def lower_graph_cell(mesh, mesh_name: str, n: int = 2_000_000,
     reconciliation — storage passed as abstract args (no allocation)."""
     from jax.experimental.shard_map import shard_map
 
+    from repro.core.algorithms import pagerank
+    from repro.core.engine import _combine_local
+
+    # the dry run must lower the SAME combine op the engine runs (the
+    # shared segmented-sum helper), not a hand-rolled twin of it
+    pr_prog = pagerank()
+
     num_blocks = n // block_size
     ndev = 1
     for a in ("pod", "data"):
@@ -277,7 +284,8 @@ def lower_graph_cell(mesh, mesh_name: str, n: int = 2_000_000,
             e_src = src[row]
             msg = values[e_src] * w[row]
             msg = jnp.where(valid[row], msg, 0.0)
-            agg = jnp.zeros(block_size, jnp.float32).at[dstl[row]].add(msg)
+            agg = _combine_local(pr_prog, msg, dstl[row], block_size,
+                                 use_pallas=False)
             base = gids[row] * block_size
             old = jax.lax.dynamic_slice(values, (base,), (block_size,))
             new = 0.15 / n + 0.85 * agg

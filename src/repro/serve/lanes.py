@@ -78,13 +78,19 @@ class LaneEngine:
     that keeps the geometry (a plan rebuild needs a new one, exactly like
     the engine's own compiled functions)."""
 
-    def __init__(self, engine: StructureAwareEngine, program: LaneProgram):
+    def __init__(self, engine: StructureAwareEngine, program: LaneProgram,
+                 use_pallas: bool | None = None):
         self.engine = engine
         self.program = program
+        # None inherits the geometry owner's flag, so a Pallas engine
+        # serves Pallas lanes without the caller re-stating it
+        self.use_pallas = (engine.config.use_pallas if use_pallas is None
+                           else use_pallas)
         p = engine.plan
         self._proc = make_lane_processor(program, p.unified, p.block_size,
                                          p.n_live, p.graph.n,
-                                         subblocks=engine.config.subblocks)
+                                         subblocks=engine.config.subblocks,
+                                         use_pallas=self.use_pallas)
         self._fns: dict = {}
 
     # -- traced pieces (mirrors of the engine's, with a lane axis) -----------

@@ -110,11 +110,13 @@ class QueryService:
     """Long-lived query façade over one StreamingEngine."""
 
     def __init__(self, streaming: StreamingEngine, max_lanes: int = 8,
-                 prewarm: bool = True):
+                 prewarm: bool = True, use_pallas: bool | None = None):
         if max_lanes < 1:
             raise ValueError("max_lanes must be >= 1")
         self.streaming = streaming
         self.max_lanes = max_lanes
+        # None defers to each epoch engine's EngineConfig.use_pallas
+        self.use_pallas = use_pallas
         self.n = streaming.n
         self.metrics = ServeMetrics()
         self._prewarm = prewarm
@@ -292,7 +294,7 @@ class QueryService:
             self._lane_engines[es.engine] = per_engine
         eng = per_engine.get(key)
         if eng is None:
-            eng = LaneEngine(es.engine, family)
+            eng = LaneEngine(es.engine, family, use_pallas=self.use_pallas)
             if self._prewarm:
                 eng.prewarm(self.max_lanes)
             per_engine[key] = eng
