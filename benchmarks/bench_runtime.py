@@ -73,6 +73,20 @@ def run(n: int = 20000):
                      f"speedup_vs_hostloop={us_h / max(us_f, 1e-9):.2f}x"))
         rows.append((f"runtime/{gname}/pagerank/sa_host_loop", us_h,
                      f"iters={slow.metrics.iterations};capped=True"))
+        # tracing-on overhead: the SAME fused 32-iteration run with the
+        # per-superstep history buffer in the carry. First traced run
+        # compiles the history-capacity bucket ladder (prewarm_buckets
+        # only warms the untraced executables); the second is the timed
+        # one. The derived overhead ratio is against the untraced fused
+        # row above, measured in the same repeat.
+        eng.run(max_iterations=32, trace=True)   # compile traced buckets
+        tr = eng.run(max_iterations=32, trace=True)
+        us_t = tr.metrics.wall_time_s * 1e6 / max(tr.metrics.iterations, 1)
+        rows.append((
+            f"runtime/{gname}/pagerank/sa_fused_loop_traced", us_t,
+            f"iters={tr.metrics.iterations};"
+            f"timeline_rows={len(tr.timeline or ())};"
+            f"overhead_vs_untraced={us_t / max(us_f, 1e-9):.3f}x"))
         # cold full-run time-to-convergence on the warmed engine: the
         # adaptive active-set claim (retirement + shrinking width + depth
         # ladder) pays off in the TAIL iterations, which the 32-iteration

@@ -62,6 +62,12 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_runtime.json ({meta, rows}) next to "
                          "the CSV output")
+    ap.add_argument("--trace", action="store_true",
+                    help="record host spans + device superstep timelines "
+                         "while each suite runs and write "
+                         "results/trace_<suite>.json (Chrome-trace JSON; "
+                         "open in ui.perfetto.dev or render with "
+                         "`python -m repro.obs render <file>`)")
     args = ap.parse_args()
 
     from benchmarks import (bench_convergence, bench_io, bench_kernels,
@@ -95,23 +101,38 @@ def main() -> None:
         # without the I/O table rows silently drops it
         pick.append("io")
     repeats = max(args.repeats, 1)
+    if args.trace:
+        from repro.obs import export as obs_export
+        from repro.obs import trace as obs_trace
+        os.makedirs("results", exist_ok=True)
     print("name,us_per_call,derived")
     ok = True
     records = []
     for key in pick:
         attempts: list[list[tuple]] = []
         err = None
-        for _ in range(repeats):
-            try:
-                attempts.append(suites[key]())
-            except ImportError:
-                # a suite that cannot even import is a broken harness, not
-                # a data point — fail loudly instead of emitting an ERROR
-                # row
-                raise
-            except Exception as e:  # noqa: BLE001
-                err = e
-                break
+        rec = obs_trace.install(obs_trace.TraceRecorder()) \
+            if args.trace else None
+        try:
+            for _ in range(repeats):
+                try:
+                    attempts.append(suites[key]())
+                except ImportError:
+                    # a suite that cannot even import is a broken harness,
+                    # not a data point — fail loudly instead of emitting an
+                    # ERROR row
+                    raise
+                except Exception as e:  # noqa: BLE001
+                    err = e
+                    break
+        finally:
+            if rec is not None:
+                obs_trace.uninstall()
+                path = obs_export.write(
+                    rec, os.path.join("results", f"trace_{key}.json"),
+                    meta={"suite": key, "n": args.n, "repeats": repeats})
+                print(f"wrote {path} ({len(rec.events)} events)",
+                      file=sys.stderr)
         if err is not None and not attempts:
             ok = False
             print(f"{key},-1,ERROR:{err!r}")

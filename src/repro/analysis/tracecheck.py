@@ -256,7 +256,7 @@ def check_one_executable_per(contracts: list[Contract]) -> list[Finding]:
     for qual, c in by_name.items():
         fn = c.target
         if qual.startswith("StructureAwareEngine._get_chunk"):
-            probe(eng, fn, (2,), (None,))
+            probe(eng, fn, (2,), (None,), (2, 16))
         elif qual.startswith("StructureAwareEngine._get_fn"):
             probe(eng, fn, (True, 2), (False, 2))
         elif qual.startswith("LaneEngine._get_chunk"):
@@ -348,6 +348,25 @@ def golden_entries() -> dict[str, str]:
         jax.ShapeDtypeStruct((w,), jnp.int32), jnp.int32(0), jnp.int32(0),
         jnp.int32(0), jax.ShapeDtypeStruct((p.num_blocks,), jnp.bool_),
         jnp.int32(4)))
+
+    # the traced fused chunk (history-buffer variant behind
+    # engine.run(trace=True)): extra int32 accounting table + the two
+    # history buffers in the carry. Its OWN golden pins the traced trace
+    # structure; the untraced entry above staying bit-identical across
+    # this PR is the proof that trace=None compiles to exactly the
+    # historical loop.
+    from repro.core.engine import (TIMELINE_FLOAT_COLS, TIMELINE_INT_COLS)
+    cap = 16
+    acct = jax.ShapeDtypeStruct((p.num_blocks, 4), jnp.int32)
+    hist_i = jax.ShapeDtypeStruct((cap, len(TIMELINE_INT_COLS)), jnp.int32)
+    hist_f = jax.ShapeDtypeStruct((cap, len(TIMELINE_FLOAT_COLS)),
+                                  jnp.float32)
+    entries["fused_chunk_traced_w2_c16"] = _canonical_hash(jax.make_jaxpr(
+        eng._get_chunk(w, cap))(
+        eng._ed, eng._coupling_dev, values, ps, ps, counts, hslots,
+        jax.ShapeDtypeStruct((w,), jnp.int32), jnp.int32(0), jnp.int32(0),
+        jnp.int32(0), jax.ShapeDtypeStruct((p.num_blocks,), jnp.bool_),
+        jnp.int32(4), acct, hist_i, hist_f))
 
     # lane chunk (serve path): chunk(ed, coupling, vconst, values, psd,
     # dmax, calm, counts, hslots, sbacc, lane_done, lane_it, it0, it_end,

@@ -115,7 +115,9 @@ from repro.analysis.contracts import one_executable_per
 from repro.core import state as state_lib
 from repro.core.algorithms import LaneProgram, VertexProgram
 from repro.core.graph import Graph, symmetrize
-from repro.core.metrics import Metrics, Timer, block_io_bytes
+from repro.core.metrics import COUNTER_FIELDS, Metrics, Timer, \
+    block_io_bytes
+from repro.obs import trace as obs_trace
 from repro.core.partition import (EdgeStorage, PartitionPlan, TiledStorage,
                                   build_plan)
 from repro.core.repartition import RepartitionState
@@ -165,6 +167,13 @@ class RunResult:
     values: np.ndarray  # indexed by ORIGINAL vertex id
     metrics: Metrics
     history: list  # per-iteration dicts (for convergence curves)
+    # per-SUPERSTEP trace timeline (``run(trace=True)``; None otherwise):
+    # dicts with TIMELINE_INT_COLS / TIMELINE_FLOAT_COLS plus
+    # superstep/width. The integer counter columns sum exactly to the
+    # aggregate Metrics counters (property-tested) — the timeline is the
+    # time-resolved decomposition of the same accounting, not a parallel
+    # estimate.
+    timeline: list | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -285,6 +294,27 @@ def acct_table(plan: PartitionPlan, edge_counts: np.ndarray) -> np.ndarray:
         e = int(edge_counts[b])
         acct[b] = (hi - lo, e, 1, block_io_bytes(e, plan.block_size))
     return acct
+
+
+# -- per-superstep trace timeline --------------------------------------------
+# Column layout of the traced chunk's history buffers (RunResult.timeline
+# keys): the four COUNTER_FIELDS deltas, then hot dispatches / retired
+# blocks / UNSEEN blocks (int32 — the per-superstep deltas are chunk-local
+# and small; the aggregate totals still flow through the int64 host acct
+# path), and the block-folded finite PSD sum/max (float32).
+TIMELINE_INT_COLS = COUNTER_FIELDS + ("hot_loads", "retired", "unseen")
+TIMELINE_FLOAT_COLS = ("psd_sum", "psd_max")
+
+
+def _hist_cap(span: int) -> int:
+    """Power-of-two history-buffer capacity covering a traced chunk span.
+    Chunk spans follow the repartition cadence, which GROWS 1.5x per
+    boundary — keying the traced executable on the raw span would compile
+    one variant per boundary. Pow2 bucketing (floor 16) keeps the
+    executable count logarithmic in the final interval while the chunk
+    boundaries themselves stay exactly where the untraced run puts them
+    (capacity never changes the trajectory, only the buffer shape)."""
+    return max(16, 1 << max(span - 1, 1).bit_length())
 
 
 def _combine_local(program: VertexProgram, msg, dst_local, block_size,
@@ -1115,8 +1145,9 @@ class StructureAwareEngine:
             metrics.edges_processed += e
 
     # -- fused device-resident loop -----------------------------------------
-    @one_executable_per("width")
-    def _get_chunk(self, width: int | None = None) -> Callable:
+    @one_executable_per("width", "trace_cap")
+    def _get_chunk(self, width: int | None = None,
+                   trace_cap: int | None = None) -> Callable:
         """Jitted multi-iteration chunk: lax.while_loop over fused
         supersteps (schedule -> hot -> cold -> staleness post -> convergence
         test), stopping at the iteration cap, at convergence, or when the
@@ -1124,9 +1155,21 @@ class StructureAwareEngine:
         chunk) hot/cold labels, the dispatch-width bucket (one compiled
         chunk per bucket — ``width`` keys the cache), and the traced
         cold-admission cadence ``i2``; it consumes one
-        psd/calm/counters sync per call."""
+        psd/calm/counters sync per call.
+
+        ``trace_cap=None`` (the default) is EXACTLY the historical chunk
+        — same closure, same trace, byte-identical golden jaxpr. With a
+        capacity (a :func:`_hist_cap` pow2 bucket; keys the cache
+        alongside ``width``) the carry grows two bounded history buffers
+        — ``(cap, len(TIMELINE_INT_COLS))`` int32 and
+        ``(cap, len(TIMELINE_FLOAT_COLS))`` float32 — and every
+        superstep writes its counter deltas / dispatch stats / PSD fold
+        at traced index ``it - it0``. The buffers ride the existing
+        boundary sync, so per-superstep resolution costs zero extra host
+        round-trips, and the algorithmic carry math is untouched — the
+        traced trajectory is bitwise the untraced one."""
         width = self.config.width if width is None else width
-        key = ("chunk", width)
+        key = ("chunk", width, trace_cap)
         if key in self._fns:
             return self._fns[key]
         cfg, plan = self.config, self.plan
@@ -1191,7 +1234,86 @@ class StructureAwareEngine:
             return (it, values, psd, dmax, calm, counts, hslots, sbacc,
                     state_lib.converged_device(psd, t2))
 
-        fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5, 6, 7, 8))
+        if trace_cap is None:
+            fn = jax.jit(chunk, donate_argnums=(2, 3, 4, 5, 6, 7, 8))
+            self._fns[key] = fn
+            return fn
+
+        # -- traced variant: bounded per-superstep history in the carry --
+        nblocks = plan.num_blocks
+        retire = cfg.retire_after
+        adaptive = cfg.adaptive
+
+        def superstep_traced(it, it0, i2, ed, coupling, values, psd, dmax,
+                             calm, counts, hslots, sbacc, hist_i, hist_f,
+                             is_hot, acct):
+            # re-derive the slate for the delta accounting: pure repeat of
+            # the select inside ``superstep`` (identical inputs), so XLA
+            # CSEs it away — and even uncached it could only duplicate
+            # work, never change a decision
+            hot_rows, hot_ok, cold_rows, cold_ok = select(it, i2, psd,
+                                                          is_hot)
+            (values, psd, dmax, calm, counts, hslots, sbacc,
+             scheduled) = superstep(it, i2, ed, coupling, values, psd,
+                                    dmax, calm, counts, hslots, sbacc,
+                                    is_hot)
+            # per-superstep counter delta through the SAME acct table the
+            # host multiplies at the boundary flush: the timeline rows sum
+            # exactly to the aggregate Metrics counters by construction
+            delta = ((acct[hot_rows]
+                      * hot_ok[:, None].astype(jnp.int32)).sum(axis=0)
+                     + (acct[cold_rows]
+                        * cold_ok[:, None].astype(jnp.int32)).sum(axis=0))
+            folded = psd.max(axis=-1)  # block fold of the post-post psd
+            finite = folded < state_lib.UNSEEN
+            if adaptive:
+                live = (calm < retire).any(axis=-1)
+                retired = (nblocks - live.sum()).astype(jnp.int32)
+            else:
+                retired = jnp.int32(0)
+            row_i = jnp.concatenate([
+                delta.astype(jnp.int32),
+                jnp.stack([hot_ok.sum().astype(jnp.int32), retired,
+                           (~finite).sum().astype(jnp.int32)])])
+            fin = jnp.where(finite, folded, 0.0)
+            row_f = jnp.stack([fin.sum(), fin.max()])
+            idx = it - it0
+            hist_i = lax.dynamic_update_slice(hist_i, row_i[None, :],
+                                              (idx, 0))
+            hist_f = lax.dynamic_update_slice(hist_f, row_f[None, :],
+                                              (idx, 0))
+            return (values, psd, dmax, calm, counts, hslots, sbacc,
+                    hist_i, hist_f, scheduled)
+
+        def chunk_traced(ed, coupling, values, psd, dmax, calm, counts,
+                         hslots, sbacc, it0, it_end, is_hot, i2, acct,
+                         hist_i, hist_f):
+            def cond(carry):
+                return (carry[0] < it_end) & jnp.logical_not(carry[-1])
+
+            def body(carry):
+                (it, values, psd, dmax, calm, counts, hslots, sbacc,
+                 hist_i, hist_f, _) = carry
+                (values, psd, dmax, calm, counts, hslots, sbacc, hist_i,
+                 hist_f, scheduled) = superstep_traced(
+                    it, it0, i2, ed, coupling, values, psd, dmax, calm,
+                    counts, hslots, sbacc, hist_i, hist_f, is_hot, acct)
+                conv = state_lib.converged_device(psd, t2)
+                it = it + jnp.where(scheduled, 1, 0).astype(it.dtype)
+                done = conv | jnp.logical_not(scheduled)
+                return (it, values, psd, dmax, calm, counts, hslots,
+                        sbacc, hist_i, hist_f, done)
+
+            (it, values, psd, dmax, calm, counts, hslots, sbacc, hist_i,
+             hist_f, _) = lax.while_loop(
+                cond, body,
+                (it0, values, psd, dmax, calm, counts, hslots, sbacc,
+                 hist_i, hist_f, jnp.bool_(False)))
+            return (it, values, psd, dmax, calm, counts, hslots, sbacc,
+                    hist_i, hist_f, state_lib.converged_device(psd, t2))
+
+        fn = jax.jit(chunk_traced,
+                     donate_argnums=(2, 3, 4, 5, 6, 7, 8, 14, 15))
         self._fns[key] = fn
         return fn
 
@@ -1219,16 +1341,33 @@ class StructureAwareEngine:
     # -- main loop ----------------------------------------------------------
     def run(self, max_iterations: int | None = None,
             fused: bool | None = None,
-            warm: WarmStart | None = None) -> RunResult:
+            warm: WarmStart | None = None,
+            trace: bool | None = None) -> RunResult:
         """Run to convergence. ``fused`` overrides ``config.fused``:
         True = device-resident chunked loop (host syncs only at repartition
         boundaries), False = reference host-driven loop (one sync per
         iteration, per-iteration history). ``warm`` re-enters from a
-        previous fixpoint with only the dirty blocks re-heated."""
+        previous fixpoint with only the dirty blocks re-heated.
+
+        ``trace`` captures the per-superstep timeline
+        (``RunResult.timeline``) and emits run/chunk/repartition spans +
+        superstep counters into the installed :mod:`repro.obs` recorder.
+        ``None`` (default) auto-enables tracing exactly when a recorder
+        is installed, so long-lived callers (streaming reconvergence,
+        serve lanes' sibling engines) inherit the capture without
+        plumbing. Values and every algorithmic counter of a traced run
+        are bitwise identical to the untraced one (property-tested)."""
         fused = self.config.fused if fused is None else fused
-        if fused:
-            return self._run_fused(max_iterations, warm)
-        return self._run_host(max_iterations, warm)
+        if trace is None:
+            trace = obs_trace.current() is not None
+        with obs_trace.span("run", cat="engine", fused=bool(fused),
+                            warm=warm is not None) as sp:
+            res = (self._run_fused(max_iterations, warm, trace=trace)
+                   if fused
+                   else self._run_host(max_iterations, warm, trace=trace))
+            sp.set(iterations=res.metrics.iterations,
+                   converged=res.metrics.converged)
+        return res
 
     def _sub2d(self, a: np.ndarray) -> np.ndarray:
         """Normalize a per-block (P,) state vector to the engine's (P, S)
@@ -1275,7 +1414,8 @@ class StructureAwareEngine:
                 calm0, int(i2))
 
     def _run_fused(self, max_iterations: int | None = None,
-                   warm: WarmStart | None = None) -> RunResult:
+                   warm: WarmStart | None = None,
+                   trace: bool = False) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
 
@@ -1293,6 +1433,13 @@ class StructureAwareEngine:
         depth_hist: dict[int, int] = {}
         width_iters = 0
         sb_total = 0
+        # tracing: spans/counters go to the installed recorder (if any);
+        # the device timeline needs only the traced chunk variant. The
+        # acct table rides as a TRACED int32 arg so the device can expand
+        # per-superstep schedule picks into counter deltas itself.
+        rec = obs_trace.current() if trace else None
+        timeline: list | None = [] if trace else None
+        acct_dev = jnp.asarray(acct.astype(np.int32)) if trace else None
         # out-of-core paging: the host scheduler twin (decision-identical
         # to the fused device select, property-tested) predicts each
         # superstep's block demand so it can be paged in BEFORE the sweep
@@ -1314,7 +1461,6 @@ class StructureAwareEngine:
         with Timer() as t:
             it = 0
             while it < max_it:
-                chunk = self._get_chunk(wb)
                 if spill is None:
                     it_end = rep.chunk_end(max_it)
                 else:
@@ -1325,20 +1471,62 @@ class StructureAwareEngine:
                     it_end = it + 1
                 # the device counts schedules per block (exact chunk-sized
                 # int32s, zeroed each chunk); the host expands them through
-                # the int64 accounting table at the boundary
-                (it_dev, values, psd, dmax, calm, counts, hslots, sbacc,
-                 conv) = chunk(
-                    self._ed, self._coupling_dev, values, psd, dmax, calm,
-                    jnp.zeros(p.num_blocks, jnp.int32),
-                    jnp.zeros(wb, jnp.int32), jnp.int32(0),
-                    jnp.int32(it), jnp.int32(it_end),
-                    jnp.asarray(rep.is_hot), jnp.int32(i2))
-                # the chunk's single host sync point
-                it_new = int(it_dev)
-                psd_sub_host = np.asarray(psd)
-                psd_host = state_lib.fold_subblock_psd(psd_sub_host)
-                calm_host = np.asarray(calm)
-                counts_host = np.asarray(counts, dtype=np.int64)
+                # the int64 accounting table at the boundary. The chunk
+                # span (dispatch -> the boundary sync that realizes the
+                # async device work) is the trace's wall window for the
+                # chunk's supersteps.
+                with obs_trace.span("chunk", cat="engine", it0=it,
+                                    width=wb) as csp:
+                    if trace:
+                        cap = _hist_cap(it_end - it)
+                        chunk = self._get_chunk(wb, cap)
+                        (it_dev, values, psd, dmax, calm, counts, hslots,
+                         sbacc, hist_i, hist_f, conv) = chunk(
+                            self._ed, self._coupling_dev, values, psd,
+                            dmax, calm,
+                            jnp.zeros(p.num_blocks, jnp.int32),
+                            jnp.zeros(wb, jnp.int32), jnp.int32(0),
+                            jnp.int32(it), jnp.int32(it_end),
+                            jnp.asarray(rep.is_hot), jnp.int32(i2),
+                            acct_dev,
+                            jnp.zeros((cap, len(TIMELINE_INT_COLS)),
+                                      jnp.int32),
+                            jnp.zeros((cap, len(TIMELINE_FLOAT_COLS)),
+                                      jnp.float32))
+                    else:
+                        chunk = self._get_chunk(wb)
+                        (it_dev, values, psd, dmax, calm, counts, hslots,
+                         sbacc, conv) = chunk(
+                            self._ed, self._coupling_dev, values, psd,
+                            dmax, calm,
+                            jnp.zeros(p.num_blocks, jnp.int32),
+                            jnp.zeros(wb, jnp.int32), jnp.int32(0),
+                            jnp.int32(it), jnp.int32(it_end),
+                            jnp.asarray(rep.is_hot), jnp.int32(i2))
+                    # the chunk's single host sync point
+                    it_new = int(it_dev)
+                    psd_sub_host = np.asarray(psd)
+                    psd_host = state_lib.fold_subblock_psd(psd_sub_host)
+                    calm_host = np.asarray(calm)
+                    counts_host = np.asarray(counts, dtype=np.int64)
+                    if trace:
+                        # history buffers flush in the SAME sync — the
+                        # per-superstep resolution is free of extra host
+                        # round-trips
+                        hi = np.asarray(hist_i)[:it_new - it]
+                        hf = np.asarray(hist_f)[:it_new - it]
+                        rows = []
+                        for k in range(it_new - it):
+                            row = {"superstep": it + k, "width": wb}
+                            row.update(zip(TIMELINE_INT_COLS,
+                                           (int(v) for v in hi[k])))
+                            row.update(zip(TIMELINE_FLOAT_COLS,
+                                           (float(v) for v in hf[k])))
+                            rows.append(row)
+                        timeline.extend(rows)
+                    csp.set(it_end=it_new)
+                if rec is not None and trace and rows:
+                    rec.counter_rows("superstep", rows, csp.t0, csp.t1)
                 delta = counts_host @ acct
                 metrics.absorb_counters(delta)
                 sb_total += int(sbacc)
@@ -1369,8 +1557,11 @@ class StructureAwareEngine:
                 it = it_new
                 # a no-op until it - 1 reaches the boundary, so the paged
                 # per-superstep calls fire on exactly the resident cadence
-                fired = rep.maybe_repartition(it - 1, psd_host,
-                                              cfg.hot_ratio)
+                with obs_trace.span("repartition", cat="engine",
+                                    iteration=it - 1) as rsp:
+                    fired = rep.maybe_repartition(it - 1, psd_host,
+                                                  cfg.hot_ratio)
+                    rsp.set(fired=fired)
                 # next chunk's bucket follows the live active set, exactly
                 # like the host loop's boundary retarget. In paged mode the
                 # bucket changes ONLY at fired boundaries (the resident
@@ -1402,10 +1593,12 @@ class StructureAwareEngine:
         self.last_psd = psd_sub_host
         self.last_calm = np.asarray(calm_host)
         out = np.asarray(values)[self.plan.inv]  # back to original ids
-        return RunResult(values=out, metrics=metrics, history=history)
+        return RunResult(values=out, metrics=metrics, history=history,
+                         timeline=timeline)
 
     def _run_host(self, max_iterations: int | None = None,
-                  warm: WarmStart | None = None) -> RunResult:
+                  warm: WarmStart | None = None,
+                  trace: bool = False) -> RunResult:
         cfg, p = self.config, self.plan
         max_it = max_iterations or cfg.max_iterations
 
@@ -1428,6 +1621,10 @@ class StructureAwareEngine:
         hslots = np.zeros(cfg.width, dtype=np.int64)
         width_iters = 0
         sb_total = 0
+        # host-path timeline: computed per iteration from the same acct
+        # table and post-superstep state the fused history buffers record
+        timeline: list | None = [] if trace else None
+        acct = self._acct_table() if trace else None
         spill = self.spill
         if spill is not None:
             from repro.ooc import prefetch as ooc_policy
@@ -1446,6 +1643,8 @@ class StructureAwareEngine:
                     spill.admit(ooc_policy.demand_blocks(sel, self.pad_id),
                                 psd_host, np.asarray(calm))
                 processed = np.concatenate([sel.hot_ids, sel.cold_ids])
+                w_used = sched.width  # this iteration's bucket (the
+                # boundary retarget below may change it before history)
                 # live sub-blocks actually swept this iteration, from the
                 # same pre-sweep psd the device masks derive from
                 sb_total += int((psd_sub[processed] >= floor).sum())
@@ -1466,7 +1665,11 @@ class StructureAwareEngine:
                                              calm)
                 psd_sub = np.asarray(psd)
                 psd_host = state_lib.fold_subblock_psd(psd_sub)
-                fired = rep.maybe_repartition(it, psd_host, cfg.hot_ratio)
+                with obs_trace.span("repartition", cat="engine",
+                                    iteration=it) as rsp:
+                    fired = rep.maybe_repartition(it, psd_host,
+                                                  cfg.hot_ratio)
+                    rsp.set(fired=fired)
                 if fired and cfg.adaptive:
                     # boundary retarget: same cadence as the fused path's
                     # per-chunk bucket pick
@@ -1489,6 +1692,26 @@ class StructureAwareEngine:
                     "scheduled": int(processed.size),
                     "width": sched.width,
                 })
+                if trace:
+                    # same columns/definitions as the fused history
+                    # buffers: counter deltas via the acct table, retired/
+                    # PSD stats from the post-superstep state
+                    d = acct[processed].sum(axis=0) if processed.size \
+                        else np.zeros(4, dtype=np.int64)
+                    finite = psd_host < state_lib.UNSEEN
+                    row = {"superstep": it, "width": w_used,
+                           "hot_loads": int(sel.hot_ids.size),
+                           "retired": p.num_blocks
+                           - self._active_count(np.asarray(calm)),
+                           "unseen": int((~finite).sum()),
+                           "psd_sum": float(
+                               psd_host[finite].astype(np.float32).sum()),
+                           "psd_max": float(
+                               psd_host[finite].max()) if finite.any()
+                           else 0.0}
+                    row.update(zip(COUNTER_FIELDS,
+                                   (int(v) for v in d)))
+                    timeline.append(row)
                 it += 1
                 if state_lib.converged(psd_sub, cfg.t2):
                     metrics.converged = True
@@ -1511,7 +1734,8 @@ class StructureAwareEngine:
         self.last_psd = psd_sub
         self.last_calm = calm_host
         out = np.asarray(values)[self.plan.inv]  # back to original ids
-        return RunResult(values=out, metrics=metrics, history=history)
+        return RunResult(values=out, metrics=metrics, history=history,
+                         timeline=timeline)
 
 
 def coupling_from_counts(block_edge_counts: np.ndarray,

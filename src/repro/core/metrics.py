@@ -19,6 +19,19 @@ COUNTER_FIELDS = ("updates", "edges_processed", "block_loads",
                   "bytes_loaded")
 
 
+def _with_properties(m) -> dict:
+    """``dataclasses.asdict`` plus every ``@property`` on the class — the
+    one serializer all three metrics classes share, so a derived quantity
+    added to a class can never silently miss its report/JSON row
+    (``tests/test_obs.py`` asserts the parity)."""
+    d = dataclasses.asdict(m)
+    for klass in reversed(type(m).__mro__):
+        for name, attr in vars(klass).items():
+            if isinstance(attr, property):
+                d[name] = getattr(m, name)
+    return d
+
+
 def block_io_bytes(edges, block_size):
     """Shared I/O cost model — bytes loaded when a block is scheduled:
     4B src id + 4B weight + 4B dst offset per edge, plus the block's vertex
@@ -65,9 +78,7 @@ class Metrics:
         return self.prefetch_hits / total if total else 1.0
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["prefetch_hit_rate"] = self.prefetch_hit_rate
-        return d
+        return _with_properties(self)
 
     def absorb_counters(self, counters) -> None:
         """Add a (len(COUNTER_FIELDS),) device-counter flush (cumulative
@@ -170,15 +181,7 @@ class StreamMetrics:
                 / max(self.batches, 1))
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["dirty_frac"] = self.dirty_frac
-        d["upload_frac"] = self.upload_frac
-        d["latency_per_batch_s"] = self.latency_per_batch_s
-        d["mean_dispatch_width"] = self.mean_dispatch_width
-        d["subblock_dirty_frac"] = self.subblock_dirty_frac
-        d["mean_subblock_dispatch"] = self.mean_subblock_dispatch
-        d["prefetch_hit_rate"] = self.prefetch_hit_rate
-        return d
+        return _with_properties(self)
 
 
 @dataclasses.dataclass
@@ -212,10 +215,7 @@ class ServeMetrics:
         return self.queries / max(self.run_time_s, 1e-9)
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d["lane_utilization"] = self.lane_utilization
-        d["queries_per_s"] = self.queries_per_s
-        return d
+        return _with_properties(self)
 
 
 class Timer:

@@ -211,14 +211,14 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
 
     micro = _tok_micro(cfg, shape, mesh) if shape.kind == "train" else 1
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     full = _cost_of(_lower_variant(cfg, shape, mesh, micro))
-    t_full = time.time() - t0
-    t0 = time.time()
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
     a0 = _cost_of(_lower_variant(_shrink(cfg, 0), shape, mesh, 1))
     a1 = _cost_of(_lower_variant(_shrink(cfg, 1), shape, mesh, 1))
     meas = {"A0": a0, "A1": a1, "L": cfg.num_layers}
-    t_variants = time.time() - t0
+    t_variants = time.perf_counter() - t0
     lin = _linear_costs(meas)
 
     compiled = full["compiled"]
@@ -406,7 +406,7 @@ def main():
                         and not args.force:
                     continue
                 print(f"[dryrun] {key} ...", flush=True)
-                t0 = time.time()
+                t0 = time.perf_counter()
                 override = (dict(OPTIMIZED.get(arch, {}))
                             if args.preset == "optimized" else None)
                 if override and SHAPES[shape_name].kind == "decode":
@@ -421,7 +421,7 @@ def main():
                     results[key] = {"status": "error", "error": repr(e),
                                     "trace": traceback.format_exc()[-2000:]}
                 print(f"[dryrun] {key}: {results[key]['status']} "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+                      f"({time.perf_counter()-t0:.1f}s)", flush=True)
                 flush()
     flush()
     bad = {k: v for k, v in results.items() if v.get("status") == "error"}

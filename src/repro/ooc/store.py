@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import EdgeData, tile_coverage
+from repro.obs import trace as obs_trace
 from repro.ooc import prefetch as policy
 
 
@@ -184,33 +185,37 @@ class SpillStore:
         blocks = blocks[self.resident[blocks] & ~self.pinned[blocks]]
         if blocks.size == 0:
             return
-        if self.on_evict is not None:
-            self.on_evict()  # pins must copy the epoch before rows vanish
-        all_rows = []
-        for b in blocks:
-            b = int(b)
-            rows = self._rows[b]
-            if self.row_source is None or self._writer is not None:
-                payload = (self.row_source(rows)
-                           if self.row_source is not None
-                           else self._gather_device(rows))
-                if self.keep_host:
-                    self._cache[b] = payload
-                if self._writer is not None:
-                    self._writer.submit(b, payload)
-            self.resident[b] = False
-            self.bytes_spilled += self._payload_bytes(rows.size)
-            all_rows.append(rows)
-        self.spill_evictions += int(blocks.size)
-        rows = np.concatenate(all_rows)
-        tile = int(self.engine.plan.unified.src.shape[1])
-        k = rows.size
-        self.engine.update_edge_rows(
-            rows,
-            src=np.zeros((k, tile), np.int32),
-            dst_local=np.zeros((k, tile), np.int32),
-            w=np.zeros((k, tile), np.float32),
-            valid=np.zeros((k, tile), bool))
+        with obs_trace.span("spill_evict", cat="ooc",
+                            blocks=int(blocks.size)) as sp:
+            if self.on_evict is not None:
+                self.on_evict()  # pins must copy the epoch before rows vanish
+            all_rows = []
+            spilled0 = self.bytes_spilled
+            for b in blocks:
+                b = int(b)
+                rows = self._rows[b]
+                if self.row_source is None or self._writer is not None:
+                    payload = (self.row_source(rows)
+                               if self.row_source is not None
+                               else self._gather_device(rows))
+                    if self.keep_host:
+                        self._cache[b] = payload
+                    if self._writer is not None:
+                        self._writer.submit(b, payload)
+                self.resident[b] = False
+                self.bytes_spilled += self._payload_bytes(rows.size)
+                all_rows.append(rows)
+            self.spill_evictions += int(blocks.size)
+            rows = np.concatenate(all_rows)
+            tile = int(self.engine.plan.unified.src.shape[1])
+            k = rows.size
+            self.engine.update_edge_rows(
+                rows,
+                src=np.zeros((k, tile), np.int32),
+                dst_local=np.zeros((k, tile), np.int32),
+                w=np.zeros((k, tile), np.float32),
+                valid=np.zeros((k, tile), bool))
+            sp.set(bytes=int(self.bytes_spilled - spilled0))
 
     def fetch(self, blocks: np.ndarray) -> None:
         """Scatter blocks' true tile rows back into the device arrays and
@@ -220,17 +225,21 @@ class SpillStore:
         blocks = blocks[~self.resident[blocks]]
         if blocks.size == 0:
             return
-        rows_l, parts = [], []
-        for b in blocks:
-            b = int(b)
-            rows_l.append(self._rows[b])
-            parts.append(self._payload_of(b))
-            self.resident[b] = True
-            self._cache.pop(b, None)
-        rows = np.concatenate(rows_l)
-        payload = {f: np.concatenate([p[f] for p in parts])
-                   for f in self.PAYLOAD_FIELDS}
-        self.bytes_fetched += self.engine.update_edge_rows(rows, **payload)
+        with obs_trace.span("prefetch", cat="ooc",
+                            blocks=int(blocks.size)) as sp:
+            rows_l, parts = [], []
+            for b in blocks:
+                b = int(b)
+                rows_l.append(self._rows[b])
+                parts.append(self._payload_of(b))
+                self.resident[b] = True
+                self._cache.pop(b, None)
+            rows = np.concatenate(rows_l)
+            payload = {f: np.concatenate([p[f] for p in parts])
+                       for f in self.PAYLOAD_FIELDS}
+            fetched = self.engine.update_edge_rows(rows, **payload)
+            self.bytes_fetched += fetched
+            sp.set(bytes=int(fetched))
 
     # -- the per-superstep / per-boundary driver entry points ---------------
     def admit(self, need: np.ndarray, psd_blk: np.ndarray,

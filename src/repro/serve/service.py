@@ -49,6 +49,7 @@ from repro.core.algorithms import LANE_FAMILIES, LaneProgram
 from repro.core.engine import coupling_from_counts
 from repro.core.metrics import ServeMetrics, Timer
 from repro.core.schedule import admission_order
+from repro.obs import trace as obs_trace
 from repro.serve.lanes import LaneEngine
 from repro.stream.delta import DeltaBatch
 from repro.stream.engine import EpochState, StreamingEngine
@@ -221,10 +222,13 @@ class QueryService:
         ed = es.ed._replace(aux=jnp.asarray(np.asarray(aux, np.float32)))
         coupling = coupling_from_counts(
             es.coupling_counts, family, es.engine.plan.block_size)
-        with Timer() as t:
+        with obs_trace.span("query_batch", cat="serve", lanes=k,
+                            family=query0.family_key()[0],
+                            epoch=es.epoch) as sp, Timer() as t:
             res = lane_eng.run(ed=ed, coupling=coupling, values0=values0,
                                vconst=vconst, lane_active=lane_active,
                                edge_counts=es.edge_counts)
+            sp.set(iterations=res.metrics.iterations)
         done_at = time.perf_counter()
         out: list[QueryResult] = []
         for lane, p in enumerate(pend):

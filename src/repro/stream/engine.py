@@ -63,6 +63,7 @@ from repro.core.engine import (EdgeData, EngineConfig, RunResult,
 from repro.core.schedule import adaptive_i2
 from repro.core.graph import Graph, edges_of, from_edges, symmetrize
 from repro.core.metrics import StreamMetrics, Timer
+from repro.obs import trace as obs_trace
 from repro.stream.apply import EdgeStore, MutableTiledState
 from repro.stream.delta import DeltaBatch
 
@@ -214,20 +215,22 @@ class StreamingEngine:
         the device state of every live pin before mutating it); it is
         tracked by weakref, so dropping the last reference makes future
         ingests free again."""
-        es = EpochState(
-            epoch=self.epoch, engine=self.engine,
-            coupling_counts=self.W.copy(),
-            out_deg=self.out_deg.copy(), in_deg=self.in_deg.copy(),
-            edge_counts=np.array(self.engine.edge_counts))
-        spill = self.engine.spill
-        if spill is not None and spill.spilled_blocks.size:
-            # under an out-of-core budget the live edge state already has
-            # spilled holes: preserve now (edge_snapshot materializes the
-            # holes from the spill tier), instead of lazily at the next
-            # ingest — the pin must be readable before then
-            es.preserve()
-            self.metrics.snapshots_preserved += 1
-        self._snapshots.append(weakref.ref(es))
+        with obs_trace.span("snapshot", cat="stream", epoch=self.epoch):
+            es = EpochState(
+                epoch=self.epoch, engine=self.engine,
+                coupling_counts=self.W.copy(),
+                out_deg=self.out_deg.copy(), in_deg=self.in_deg.copy(),
+                edge_counts=np.array(self.engine.edge_counts))
+            spill = self.engine.spill
+            if spill is not None and spill.spilled_blocks.size:
+                # under an out-of-core budget the live edge state already
+                # has spilled holes: preserve now (edge_snapshot
+                # materializes the holes from the spill tier), instead of
+                # lazily at the next ingest — the pin must be readable
+                # before then
+                es.preserve()
+                self.metrics.snapshots_preserved += 1
+            self._snapshots.append(weakref.ref(es))
         return es
 
     def _preserve_pinned(self) -> int:
@@ -408,6 +411,17 @@ class StreamingEngine:
 
     # -- ingest --------------------------------------------------------------
     def ingest(self, batch: DeltaBatch) -> StreamBatchReport:
+        with obs_trace.span("ingest", cat="stream",
+                            inserts=batch.n_inserts,
+                            deletes=batch.n_deletes,
+                            epoch=self.epoch) as sp:
+            report = self._ingest_impl(batch)
+            sp.set(dirty_blocks=report.dirty_blocks,
+                   plan_rebuild=report.plan_rebuild,
+                   iterations=report.iterations)
+        return report
+
+    def _ingest_impl(self, batch: DeltaBatch) -> StreamBatchReport:
         prog, eng = self.program, self.engine
         plan = eng.plan
         c = plan.block_size
@@ -690,7 +704,8 @@ class StreamingEngine:
             self.store.maybe_compact()
 
         res = None
-        with Timer() as t_run:
+        with obs_trace.span("reconverge", cat="stream",
+                            warm=self.stream.warm), Timer() as t_run:
             if self.stream.warm:
                 if psd0.any():
                     vals_perm = self._values[self.engine.plan.order].astype(

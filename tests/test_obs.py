@@ -1,0 +1,223 @@
+"""Observability layer: tracing must be a pure observer.
+
+The load-bearing property: ``run(trace=True)`` (history buffer in the
+fused carry, spans recording on the host) is BITWISE identical to the
+untraced run — values and every algorithmic counter — on the fused and
+host paths and across warm streaming batches. Plus the timeline-sum
+property (per-superstep deltas sum exactly to the aggregate ``Metrics``
+counters), the ``as_dict``/@property parity contract, the Chrome-trace
+exporter schema, the ring-buffer bound, and the CLI renderer.
+"""
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import algorithms as A
+from repro.core import graph as G
+from repro.core.engine import (TIMELINE_FLOAT_COLS, TIMELINE_INT_COLS,
+                               EngineConfig, StructureAwareEngine,
+                               _hist_cap)
+from repro.core.metrics import (COUNTER_FIELDS, Metrics, ServeMetrics,
+                                StreamMetrics)
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.__main__ import main as obs_cli
+from repro.stream import StreamingEngine, synthetic_stream
+
+CFG = EngineConfig(t2=1e-9, width=4, block_size=128)
+PROGS = {"pagerank": A.pagerank, "sssp": lambda: A.sssp(0), "cc": A.cc}
+
+
+def _counters(m: Metrics) -> dict:
+    return {k: getattr(m, k) for k in COUNTER_FIELDS}
+
+
+# -- bitwise parity: tracing is a pure observer ------------------------------
+@given(seed=st.integers(0, 20), n=st.integers(200, 600),
+       algo=st.sampled_from(["pagerank", "sssp", "cc"]),
+       fused=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_traced_run_bitwise_identical_property(seed, n, algo, fused):
+    g = G.powerlaw_graph(n, avg_deg=4, seed=seed, weighted=True)
+    eng = StructureAwareEngine(g, PROGS[algo](), CFG)
+    plain = eng.run(fused=fused)
+    traced = eng.run(fused=fused, trace=True)
+    assert np.array_equal(plain.values, traced.values), \
+        f"{algo} values diverged under tracing (fused={fused})"
+    assert plain.metrics.iterations == traced.metrics.iterations
+    assert _counters(plain.metrics) == _counters(traced.metrics)
+    assert plain.metrics.converged == traced.metrics.converged
+    assert plain.timeline is None
+    assert traced.timeline is not None
+    assert len(traced.timeline) == traced.metrics.iterations
+
+
+# -- the timeline-sum property -----------------------------------------------
+@given(seed=st.integers(0, 20), algo=st.sampled_from(["pagerank", "sssp"]),
+       fused=st.booleans(), adaptive=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_timeline_sums_to_aggregate_counters_property(seed, algo, fused,
+                                                      adaptive):
+    """Every ``block_io_bytes``-derived counter reconstructed by summing
+    the per-superstep timeline equals the aggregate ``Metrics`` total —
+    the rows go through the same per-block accounting table."""
+    g = G.powerlaw_graph(400, avg_deg=5, seed=seed, weighted=True)
+    cfg = EngineConfig(t2=1e-9, width=4, block_size=128,
+                       adaptive=adaptive)
+    res = StructureAwareEngine(g, PROGS[algo](), cfg).run(
+        fused=fused, trace=True)
+    tl = res.timeline
+    assert len(tl) == res.metrics.iterations
+    for field in COUNTER_FIELDS:
+        assert sum(r[field] for r in tl) == getattr(res.metrics, field), \
+            f"timeline {field} sum != aggregate (fused={fused})"
+    cols = set(TIMELINE_INT_COLS) | set(TIMELINE_FLOAT_COLS) \
+        | {"superstep", "width"}
+    for r in tl:
+        assert cols <= set(r)
+    assert [r["superstep"] for r in tl] == list(range(len(tl)))
+
+
+def test_streaming_warm_batches_identical_under_recording():
+    """Two identical streaming engines, one ingesting with a recorder
+    installed: per-batch reports and final values are bitwise equal, and
+    the recorder holds the ingest/reconverge/run span hierarchy."""
+    g = G.powerlaw_graph(300, avg_deg=4, seed=3, weighted=True)
+    batches = synthetic_stream(g, 3, 30, seed=4, delete_frac=0.25,
+                               weighted=True)
+    plain = StreamingEngine(g, A.pagerank(), CFG)
+    traced = StreamingEngine(g, A.pagerank(), CFG)
+    with obs_trace.recording() as rec:
+        reps_t = [traced.ingest(b) for b in batches]
+    reps_p = [plain.ingest(b) for b in batches]
+    for rp, rt in zip(reps_p, reps_t):
+        assert rp.iterations == rt.iterations
+        assert rp.edges_processed == rt.edges_processed
+        assert rp.dirty_blocks == rt.dirty_blocks
+        assert rp.bytes_uploaded == rt.bytes_uploaded
+    assert np.array_equal(plain.values, traced.values)
+    names = {e["name"] for e in rec.events if e["type"] == "span"}
+    assert {"ingest", "reconverge", "run", "chunk"} <= names
+    ing = [e for e in rec.events
+           if e["type"] == "span" and e["name"] == "ingest"]
+    assert len(ing) == len(batches)
+    assert all(e["args"]["iterations"] == rp.iterations
+               for e, rp in zip(ing, reps_p))
+
+
+def test_run_trace_autodetects_installed_recorder():
+    g = G.uniform_graph(200, deg=4, seed=0, weighted=True)
+    eng = StructureAwareEngine(g, A.pagerank(), CFG)
+    assert eng.run().timeline is None
+    with obs_trace.recording() as rec:
+        res = eng.run()  # trace=None + installed recorder -> traced
+    assert res.timeline is not None
+    assert any(e["type"] == "counter" for e in rec.events)
+    assert eng.run().timeline is None  # uninstalled again
+
+
+# -- as_dict / @property parity ----------------------------------------------
+@pytest.mark.parametrize("cls", [Metrics, StreamMetrics, ServeMetrics])
+def test_every_property_lands_in_as_dict(cls):
+    m = cls()
+    d = m.as_dict()
+    props = [name for klass in type(m).__mro__
+             for name, attr in vars(klass).items()
+             if isinstance(attr, property)]
+    assert props, f"{cls.__name__} grew property-less — update the test"
+    for name in props:
+        assert name in d, f"{cls.__name__}.{name} missing from as_dict()"
+        assert d[name] == getattr(m, name)
+    # and the dataclass fields are all still there too
+    import dataclasses
+    for f in dataclasses.fields(cls):
+        assert f.name in d
+
+
+# -- recorder / exporter ------------------------------------------------------
+def test_ring_buffer_bounds_memory_and_counts_drops():
+    rec = obs_trace.TraceRecorder(capacity=8)
+    for i in range(20):
+        with rec.span("s", cat="t", i=i):
+            pass
+    assert len(rec.events) == 8
+    assert rec.dropped == 12
+    # oldest dropped, newest kept
+    assert [e["args"]["i"] for e in rec.events] == list(range(12, 20))
+
+
+def test_span_without_recorder_is_noop():
+    assert obs_trace.current() is None
+    with obs_trace.span("x", cat="y", a=1) as h:
+        h.set(b=2)  # must not raise
+    obs_trace.instant("z")  # must not raise
+    assert obs_trace.current() is None
+
+
+def test_nested_spans_depth_and_args():
+    with obs_trace.recording() as rec:
+        with obs_trace.span("outer", cat="t") as o:
+            with obs_trace.span("inner", cat="t"):
+                pass
+            o.set(k=3)
+    spans = {e["name"]: e for e in rec.events}
+    assert spans["inner"]["depth"] == 1
+    assert spans["outer"]["depth"] == 0
+    assert spans["outer"]["args"] == {"k": 3}
+    assert spans["outer"]["dur"] >= spans["inner"]["dur"]
+
+
+def test_chrome_export_schema_valid(tmp_path):
+    with obs_trace.recording() as rec:
+        with obs_trace.span("a", cat="x", n=1):
+            rec.counter_rows("c", [{"v": 1, "skip": "str"},
+                                   {"v": 2}], 0.0, 1.0)
+        rec.instant("mark", note="hi")
+    payload = obs_export.to_chrome(rec, meta={"suite": "unit"})
+    assert obs_export.validate(payload) == []
+    phs = [e["ph"] for e in payload["traceEvents"]]
+    assert phs.count("C") == 2 and "X" in phs and "i" in phs
+    cs = [e for e in payload["traceEvents"] if e["ph"] == "C"]
+    assert all("skip" not in e["args"] for e in cs)  # non-numeric filtered
+    assert cs[0]["ts"] < cs[1]["ts"]  # interpolated placement
+    assert payload["otherData"]["suite"] == "unit"
+    p = obs_export.write(rec, str(tmp_path / "t.json"))
+    assert obs_export.validate(json.load(open(p))) == []
+
+
+def test_validate_rejects_malformed_payloads():
+    assert obs_export.validate([]) != []
+    assert obs_export.validate({}) != []
+    bad = {"traceEvents": [
+        {"ph": "Z", "name": "x", "pid": 1, "tid": 1, "ts": 0},
+        {"ph": "X", "name": "x", "pid": 1, "tid": 1, "ts": -1},
+        {"ph": "C", "name": "c", "pid": 1, "tid": 1, "ts": 0,
+         "args": {"v": "nan"}},
+    ]}
+    errs = obs_export.validate(bad)
+    assert len(errs) >= 3
+
+
+def test_cli_render_and_validate(tmp_path, capsys):
+    g = G.uniform_graph(200, deg=4, seed=1, weighted=True)
+    with obs_trace.recording() as rec:
+        StructureAwareEngine(g, A.pagerank(), CFG).run()
+    path = obs_export.write(rec, str(tmp_path / "trace_run.json"))
+    assert obs_cli(["validate", path]) == 0
+    assert obs_cli(["render", path, "--limit", "10"]) == 0
+    out = capsys.readouterr().out
+    assert "valid chrome-trace JSON" in out
+    assert "phase breakdown" in out and "engine/run" in out
+    assert "superstep counters" in out
+
+
+# -- history-capacity buckets -------------------------------------------------
+def test_hist_cap_pow2_buckets():
+    assert _hist_cap(1) == 16 and _hist_cap(16) == 16
+    assert _hist_cap(17) == 32 and _hist_cap(32) == 32
+    assert _hist_cap(33) == 64
+    assert _hist_cap(1000) == 1024  # no upper clamp
+    for s in range(1, 200):
+        assert _hist_cap(s) >= s  # a chunk always fits its buffer
